@@ -1,0 +1,14 @@
+"""Fig. 8: fidelity across all 8 circuits (paper: > 0.99 everywhere)."""
+from .common import ALL_CIRCUITS, emit, fidelity_vs_dense, run_engine
+
+
+def main():
+    for name in ALL_CIRCUITS:
+        qc, state, stats, _ = run_engine(name, 12, local_bits=6)
+        emit("fidelity", name, fidelity_vs_dense(qc, state))
+        emit("fidelity", f"{name}_stages", stats.n_stages)
+        emit("fidelity", f"{name}_gates", stats.n_gates)
+
+
+if __name__ == "__main__":
+    main()

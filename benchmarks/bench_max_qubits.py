@@ -1,0 +1,30 @@
+"""Table 2: max supported qubits under a fixed memory budget.
+
+Method (container-scale): run each circuit at n=16, measure the peak
+compressed footprint ratio, then solve max n with  ratio-scaled 2^(n+4)
+<= budget  for BMQSIM vs  2^(n+4) <= budget  for dense simulators.
+A second row adds the SSD tier (paper: +5 qubits for BMQSIM)."""
+import math
+
+from .common import ALL_CIRCUITS, emit, run_engine
+
+BUDGET = 64 * 2 ** 30          # 64 GiB "machine"
+SSD = 4 * 2 ** 40              # + 4 TB storage tier
+
+
+def main():
+    dense_max = int(math.log2(BUDGET)) - 4
+    emit("max_qubits", "dense_any_circuit", dense_max)
+    for name in ALL_CIRCUITS:
+        _, _, stats, _ = run_engine(name, 16, local_bits=10, inner_size=2)
+        ratio = stats.standard_bytes / max(1, stats.peak_total_bytes)
+        bmq = int(math.log2(BUDGET * ratio)) - 4
+        bmq_ssd = int(math.log2((BUDGET + SSD) * ratio)) - 4
+        emit("max_qubits", f"{name}_ratio", round(ratio, 1))
+        emit("max_qubits", f"{name}_bmqsim", bmq)
+        emit("max_qubits", f"{name}_bmqsim_ssd", bmq_ssd)
+        emit("max_qubits", f"{name}_extra_qubits", bmq - dense_max)
+
+
+if __name__ == "__main__":
+    main()

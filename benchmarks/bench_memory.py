@@ -1,0 +1,14 @@
+"""Fig. 9: peak memory vs the 2^(n+4)-byte standard."""
+from .common import ALL_CIRCUITS, emit, run_engine
+
+
+def main():
+    for name in ALL_CIRCUITS:
+        _, _, stats, _ = run_engine(name, 16, local_bits=10)
+        emit("memory", f"{name}_peak_bytes", stats.peak_total_bytes)
+        emit("memory", f"{name}_standard_bytes", stats.standard_bytes)
+        emit("memory", f"{name}_reduction", stats.memory_reduction)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Fig. 13: multi-device scaling of independent SV groups (subprocess
+with forced host device counts, like the paper's 1/2/4 GPUs)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+from .common import emit
+
+_CODE = """
+import time, jax
+from repro.core import build_circuit, EngineConfig, simulate_bmqsim
+qc = build_circuit("qft", 14)
+cfg = EngineConfig(local_bits=7, devices=jax.devices())
+t0 = time.perf_counter()
+simulate_bmqsim(qc, cfg, collect_state=False)
+print("T", time.perf_counter() - t0)
+"""
+
+
+def main():
+    base = None
+    for ndev in (1, 2, 4):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+        env["PYTHONPATH"] = "src"
+        out = subprocess.run([sys.executable, "-c", textwrap.dedent(_CODE)],
+                             capture_output=True, text=True, env=env,
+                             timeout=900, cwd=os.path.dirname(
+                                 os.path.dirname(os.path.abspath(__file__))))
+        t = float(out.stdout.split("T")[-1])
+        base = base or t
+        emit("multidev", f"devices_{ndev}_s", t)
+        emit("multidev", f"devices_{ndev}_speedup", base / t)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Fig. 11: compression overhead — BMQSIM vs BMQSIM-without-compression."""
+from .common import emit, run_engine
+
+
+def main():
+    for name in ("cat_state", "qft", "qaoa"):
+        for n in (12, 14):
+            _, _, s_c, t_c = run_engine(name, n, local_bits=n - 6)
+            _, _, s_n, t_n = run_engine(name, n, local_bits=n - 6,
+                                        compression=False)
+            emit("overhead", f"{name}_{n}_with_s", t_c)
+            emit("overhead", f"{name}_{n}_without_s", t_n)
+            emit("overhead", f"{name}_{n}_overhead_pct",
+                 100.0 * (t_c - t_n) / t_n)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Fig. 14: circuit-partition time as a share of end-to-end time."""
+from .common import ALL_CIRCUITS, emit, run_engine
+
+
+def main():
+    for name in ALL_CIRCUITS:
+        _, _, stats, t = run_engine(name, 12, local_bits=6)
+        emit("partition", f"{name}_partition_pct",
+             100.0 * stats.t_partition / max(t, 1e-9))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Fig. 12: pipeline depth sweep (paper: CUDA stream count)."""
+from .common import emit, run_engine
+
+
+def main():
+    base = None
+    for depth in (1, 2, 4, 8):
+        _, _, _, t = run_engine("qft", 14, local_bits=7,
+                                pipeline_depth=depth)
+        base = base or t
+        emit("pipeline", f"depth_{depth}_s", t)
+        emit("pipeline", f"depth_{depth}_speedup", base / t)
+
+
+if __name__ == "__main__":
+    main()

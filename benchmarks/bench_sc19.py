@@ -1,0 +1,21 @@
+"""Fig. 7: BMQSIM (per-stage compression) vs SC19-Sim (per-gate) —
+simulation time and compression-operation counts."""
+from .common import emit, fidelity_vs_dense, run_engine
+
+
+def main():
+    for name in ("qft", "ising"):
+        qc, st_b, stats_b, t_b = run_engine(name, 12, local_bits=6)
+        _, st_s, stats_s, t_s = run_engine(name, 12, local_bits=6,
+                                           per_gate=True)
+        emit("sc19", f"{name}_bmqsim_s", t_b)
+        emit("sc19", f"{name}_sc19_s", t_s)
+        emit("sc19", f"{name}_speedup", t_s / t_b)
+        emit("sc19", f"{name}_stages_bmqsim", stats_b.n_stages)
+        emit("sc19", f"{name}_stages_sc19", stats_s.n_stages)
+        emit("sc19", f"{name}_fid_bmqsim", fidelity_vs_dense(qc, st_b))
+        emit("sc19", f"{name}_fid_sc19", fidelity_vs_dense(qc, st_s))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Fig. 10: simulation time, BMQSIM vs the dense engine (SV-Sim-like)."""
+from .common import emit, run_engine, timed
+from repro.core import build_circuit, simulate_dense
+
+
+def main():
+    for name in ("qft", "qaoa", "bv"):
+        qc = build_circuit(name, 14)
+        _, t_dense = timed(lambda: simulate_dense(qc).block_until_ready())
+        _, _, stats, t_bmq = run_engine(name, 14, local_bits=8)
+        emit("sim_time", f"{name}_dense_s", t_dense)
+        emit("sim_time", f"{name}_bmqsim_s", t_bmq)
+        emit("sim_time", f"{name}_ratio", t_bmq / t_dense)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Fig. 15: inner size x SV block size -> compression ratio + time."""
+from .common import emit, run_engine
+
+
+def main():
+    for b in (5, 6, 7):
+        for inner in (2, 3, 4):
+            _, _, stats, t = run_engine("qaoa", 13, local_bits=b,
+                                        inner_size=inner)
+            key = f"b{b}_inner{inner}"
+            emit("tuning", f"{key}_ratio", stats.memory_reduction)
+            emit("tuning", f"{key}_time_s", t)
+            emit("tuning", f"{key}_stages", stats.n_stages)
+
+
+if __name__ == "__main__":
+    main()

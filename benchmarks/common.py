@@ -1,0 +1,41 @@
+"""Shared benchmark plumbing: timing, CSV emission, standard sizes.
+
+Sizes are container-scale (single CPU core); every benchmark mirrors one
+paper table/figure and prints ``bench,key,value`` CSV rows so runs diff
+cleanly.  EXPERIMENTS.md records a full run.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (EngineConfig, build_circuit, fidelity,
+                        simulate_bmqsim, simulate_dense)
+
+ALL_CIRCUITS = ["cat_state", "cc", "ising", "qft", "bv", "qsvm",
+                "ghz_state", "qaoa"]
+
+
+def emit(bench: str, key: str, value) -> None:
+    if isinstance(value, float):
+        value = f"{value:.6g}"
+    print(f"{bench},{key},{value}", flush=True)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def run_engine(name: str, n: int, **cfg_kw):
+    qc = build_circuit(name, n)
+    cfg = EngineConfig(**cfg_kw)
+    (state, stats), dt = timed(simulate_bmqsim, qc, cfg)
+    return qc, state, stats, dt
+
+
+def fidelity_vs_dense(qc, state) -> float:
+    ideal = np.asarray(simulate_dense(qc))
+    return fidelity(ideal.astype(np.complex128), state.astype(np.complex128))

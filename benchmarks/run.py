@@ -1,0 +1,47 @@
+"""Benchmark driver: one module per paper table/figure (DESIGN.md §6).
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--skip-slow]
+
+Emits ``bench,key,value`` CSV on stdout; EXPERIMENTS.md archives a run.
+"""
+import argparse
+import sys
+import time
+
+from . import (bench_fidelity, bench_max_qubits, bench_memory,
+               bench_multidev, bench_overhead, bench_partition,
+               bench_pipeline, bench_sc19, bench_sim_time, bench_tuning)
+
+BENCHES = {
+    "max_qubits": bench_max_qubits.main,     # Table 2
+    "sc19": bench_sc19.main,                 # Fig. 7
+    "fidelity": bench_fidelity.main,         # Fig. 8
+    "memory": bench_memory.main,             # Fig. 9
+    "sim_time": bench_sim_time.main,         # Fig. 10
+    "overhead": bench_overhead.main,         # Fig. 11
+    "pipeline": bench_pipeline.main,         # Fig. 12
+    "multidev": bench_multidev.main,         # Fig. 13
+    "partition": bench_partition.main,       # Fig. 14
+    "tuning": bench_tuning.main,             # Fig. 15
+}
+SLOW = {"multidev"}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--skip-slow", action="store_true")
+    args = ap.parse_args(argv)
+    names = [args.only] if args.only else list(BENCHES)
+    print("bench,key,value")
+    for name in names:
+        if args.skip_slow and name in SLOW:
+            continue
+        t0 = time.time()
+        BENCHES[name]()
+        print(f"{name},elapsed_s,{time.time()-t0:.1f}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,63 @@
+"""Serve a small LM with batched requests: prefill + decode loop, with
+optional pwrel-compressed KV cache (the paper's technique as a serving
+feature — 1.78x less cache HBM).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen3-4b \
+        --batch 4 --prompt-len 32 --gen 16 [--compressed-kv]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced_config
+from repro.models import transformer as T
+from repro.serving.kvcache import compress_prefill_cache
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--compressed-kv", action="store_true")
+    args = ap.parse_args()
+
+    cfg = reduced_config(get_config(args.arch))
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    max_len = args.prompt_len + args.gen
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab)
+
+    t0 = time.perf_counter()
+    logits, cache = T.forward_prefill(cfg, params, prompts, max_len=max_len)
+    if args.compressed_kv:
+        cache = compress_prefill_cache(cache)
+        nbytes = sum(x.nbytes for x in jax.tree.leaves(cache))
+        print(f"compressed KV cache: {nbytes/2**20:.2f} MiB")
+    t_prefill = time.perf_counter() - t0
+
+    decode = jax.jit(
+        lambda p, tok, c, pos: T.forward_decode(cfg, p, tok, c, pos))
+    tok = jnp.argmax(logits, -1)[:, None]
+    outs = [tok]
+    t0 = time.perf_counter()
+    for i in range(args.gen):
+        logits, cache = decode(params, tok, cache, args.prompt_len + i)
+        tok = jnp.argmax(logits, -1)[:, None]
+        outs.append(tok)
+    t_dec = time.perf_counter() - t0
+
+    gen = jnp.concatenate(outs, 1)
+    print(f"arch {cfg.name} batch={args.batch} prompt={args.prompt_len}")
+    print(f"prefill {t_prefill*1e3:.0f} ms | "
+          f"decode {t_dec/args.gen*1e3:.1f} ms/tok "
+          f"({args.batch*args.gen/t_dec:.1f} tok/s)")
+    print("generated token ids, request 0:", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

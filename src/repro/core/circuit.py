@@ -1,0 +1,94 @@
+"""Circuit IR: a flat list of Gate ops over n qubits (little-endian)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from . import gates as G
+
+
+@dataclass(frozen=True)
+class Gate:
+    """One gate application.
+
+    ``qubits`` is the target tuple; ``qubits[0]`` maps to the least-significant
+    bit of the matrix index (see gates.py conventions).
+    """
+
+    name: str
+    qubits: tuple[int, ...]
+    matrix: np.ndarray
+    params: tuple[float, ...] = ()
+
+    def __post_init__(self):
+        k = len(self.qubits)
+        assert self.matrix.shape == (2 ** k, 2 ** k), (self.name, self.matrix.shape)
+        assert len(set(self.qubits)) == k, f"duplicate qubits in {self.name}"
+
+    @property
+    def support(self) -> frozenset[int]:
+        return frozenset(self.qubits)
+
+
+@dataclass
+class Circuit:
+    n_qubits: int
+    gates: list[Gate] = field(default_factory=list)
+
+    # -- builder API ---------------------------------------------------------
+    def append(self, name: str, qubits: Sequence[int], *params: float) -> "Circuit":
+        for q in qubits:
+            if not 0 <= q < self.n_qubits:
+                raise ValueError(f"qubit {q} out of range for n={self.n_qubits}")
+        mat = np.asarray(G.GATE_FACTORIES[name](*params), dtype=np.complex128)
+        self.gates.append(Gate(name, tuple(qubits), mat, tuple(params)))
+        return self
+
+    def h(self, q):            return self.append("h", [q])
+    def x(self, q):            return self.append("x", [q])
+    def y(self, q):            return self.append("y", [q])
+    def z(self, q):            return self.append("z", [q])
+    def s(self, q):            return self.append("s", [q])
+    def t(self, q):            return self.append("t", [q])
+    def sdg(self, q):          return self.append("sdg", [q])
+    def tdg(self, q):          return self.append("tdg", [q])
+    def rx(self, th, q):       return self.append("rx", [q], th)
+    def ry(self, th, q):       return self.append("ry", [q], th)
+    def rz(self, th, q):       return self.append("rz", [q], th)
+    def p(self, lam, q):       return self.append("p", [q], lam)
+    def u3(self, th, ph, lam, q): return self.append("u3", [q], th, ph, lam)
+    # two-qubit: (target, control) order in the stored tuple
+    def cx(self, c, t):        return self.append("cx", [t, c])
+    def cz(self, c, t):        return self.append("cz", [t, c])
+    def cp(self, lam, c, t):   return self.append("cp", [t, c], lam)
+    def crz(self, th, c, t):   return self.append("crz", [t, c], th)
+    def swap(self, a, b_):     return self.append("swap", [a, b_])
+    def rzz(self, th, a, b_):  return self.append("rzz", [a, b_], th)
+    def rxx(self, th, a, b_):  return self.append("rxx", [a, b_], th)
+
+    # -- properties ----------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.gates)
+
+    def __iter__(self) -> Iterable[Gate]:
+        return iter(self.gates)
+
+    def qubit_histogram(self) -> dict[int, int]:
+        hist: dict[int, int] = {}
+        for g in self.gates:
+            for q in g.qubits:
+                hist[q] = hist.get(q, 0) + 1
+        return hist
+
+    def depth(self) -> int:
+        """Logical depth (greedy ASAP scheduling)."""
+        level = [0] * self.n_qubits
+        d = 0
+        for g in self.gates:
+            lv = max(level[q] for q in g.qubits) + 1
+            for q in g.qubits:
+                level[q] = lv
+            d = max(d, lv)
+        return d

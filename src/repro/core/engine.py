@@ -1,0 +1,293 @@
+"""The BMQSIM engine (paper §4): compressed, staged state-vector simulation.
+
+Execution model per stage (from the §4.1 partition):
+
+    for each SV group (independent):            # parallel across devices
+        decompress 2^m member blocks -> flat 2^(b+m) group array   (host)
+        apply the stage's fused unitaries                          (device)
+        recompress the 2^m blocks -> two-level store               (host)
+
+The decompress/compute/compress phases of *different* groups overlap via a
+thread pipeline (§4.2's transfer-concealed workflow — zlib/numpy release
+the GIL, JAX dispatch is async, so the overlap is real on this host too).
+Groups never communicate: multi-device execution (§4.2 multi-GPU) is plain
+round-robin group placement with zero collectives.
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..compression.codec import (
+    CompressedBlock, compress_complex_block, decompress_complex_block,
+)
+from ..compression.pwrel import PwRelParams
+from ..compression.store import BlockStore
+from .circuit import Circuit
+from .dense_engine import apply_matrix
+from .fusion import FusedGate, fuse_gates
+from .groups import GroupLayout
+from .partition import Partition, partition_circuit
+
+__all__ = ["EngineConfig", "SimStats", "BMQSimEngine", "simulate_bmqsim"]
+
+
+@dataclass
+class EngineConfig:
+    local_bits: int                  # b: SV block = 2^b amplitudes
+    inner_size: int = 2              # max inner global indices per stage
+    b_r: float = 1e-3                # point-wise relative bound (paper default)
+    max_fused_qubits: int = 5        # fusion width (7 => 128x128 MXU tiles on TPU)
+    compression: bool = True         # False = raw blocks (Fig. 11 baseline)
+    prescan: bool = True             # bitmap pre-scan RLE (§4.3)
+    pipeline_depth: int = 2          # decompress-ahead / compress-behind workers
+    ram_budget_bytes: int | None = None
+    spill_dir: str | None = None
+    use_kernel: bool = False         # Pallas gate_apply path (interpret on CPU)
+    devices: list | None = None      # round-robin group placement targets
+    per_gate: bool = False           # SC19-Sim baseline: one stage per gate
+                                     # (decompress+recompress per gate, §3)
+
+
+@dataclass
+class SimStats:
+    n_qubits: int = 0
+    n_gates: int = 0
+    n_stages: int = 0
+    n_fused_unitaries: int = 0
+    n_block_compressions: int = 0
+    n_block_decompressions: int = 0
+    peak_ram_bytes: int = 0
+    peak_total_bytes: int = 0
+    disk_bytes: int = 0
+    n_spills: int = 0
+    t_decompress: float = 0.0
+    t_compute: float = 0.0
+    t_compress: float = 0.0
+    t_partition: float = 0.0
+    t_total: float = 0.0
+
+    @property
+    def standard_bytes(self) -> int:
+        """The paper's 2^(n+4) standard (complex128 full state)."""
+        return 2 ** (self.n_qubits + 4)
+
+    @property
+    def standard_bytes_c64(self) -> int:
+        return 2 ** (self.n_qubits + 3)
+
+    @property
+    def memory_reduction(self) -> float:
+        return self.standard_bytes / max(1, self.peak_total_bytes)
+
+
+# --------------------------------------------------------------------------
+# stage compute: fused unitaries applied to a flat 2^nv group array
+# --------------------------------------------------------------------------
+
+def _apply_fused(amps: jax.Array, mats: tuple[jax.Array, ...],
+                 plan: tuple[tuple[tuple[int, ...], bool], ...],
+                 nv: int) -> jax.Array:
+    for mat, (vqubits, diag) in zip(mats, plan):
+        if diag:
+            # diagonal fast path: elementwise multiply, no GEMM
+            k = len(vqubits)
+            axes = [nv - 1 - q for q in vqubits]
+            rest = [a for a in range(nv) if a not in axes]
+            perm = rest + [axes[j] for j in range(k - 1, -1, -1)]
+            t = amps.reshape((2,) * nv).transpose(perm).reshape(-1, 2 ** k)
+            t = t * mat[None, :].astype(t.dtype)
+            inv = np.argsort(np.asarray(perm))
+            amps = t.reshape([2] * nv).transpose(list(inv)).reshape(-1)
+        else:
+            amps = apply_matrix(amps, mat, vqubits, nv)
+    return amps
+
+
+@lru_cache(maxsize=512)
+def _stage_fn(plan: tuple[tuple[tuple[int, ...], bool], ...], nv: int,
+              use_kernel: bool):
+    """Jitted group-update function, cached on the stage *structure* so
+    stages with identical access patterns share one compilation."""
+    if use_kernel:
+        from ..kernels import ops as kops
+
+        def fn(amps, *mats):
+            for mat, (vqubits, diag) in zip(mats, plan):
+                amps = kops.apply_fused_gate(amps, mat, vqubits, nv, diag)
+            return amps
+    else:
+        def fn(amps, *mats):
+            return _apply_fused(amps, mats, plan, nv)
+    return jax.jit(fn)
+
+
+class BMQSimEngine:
+    def __init__(self, circuit: Circuit, config: EngineConfig):
+        self.circuit = circuit
+        self.cfg = config
+        self.n = circuit.n_qubits
+        self.b = min(config.local_bits, self.n)
+        self.params = PwRelParams(b_r=config.b_r)
+        self.store = BlockStore(ram_budget_bytes=config.ram_budget_bytes,
+                                spill_dir=config.spill_dir)
+        self.stats = SimStats(n_qubits=self.n, n_gates=len(circuit))
+
+        t0 = time.perf_counter()
+        if config.per_gate:
+            from .partition import Stage
+            stages = [Stage(gates=[g],
+                            inner=sorted({q for q in g.qubits if q >= self.b}))
+                      for g in circuit.gates]
+            self.partition = Partition(self.n, self.b, config.inner_size,
+                                       stages)
+        else:
+            self.partition = partition_circuit(
+                circuit, self.b, config.inner_size)
+        self.stats.t_partition = time.perf_counter() - t0
+        self.stats.n_stages = self.partition.n_stages
+
+        # per-stage: layout + fused gates remapped to virtual qubits
+        self._stages: list[tuple[GroupLayout, list[FusedGate]]] = []
+        for st in self.partition.stages:
+            layout = GroupLayout(self.n, self.b, tuple(st.inner))
+            fused = fuse_gates(st.gates, config.max_fused_qubits)
+            vgates = [
+                FusedGate(layout.remap_qubits(fg.qubits), fg.matrix)
+                for fg in fused
+            ]
+            self.stats.n_fused_unitaries += len(vgates)
+            self._stages.append((layout, vgates))
+
+        self._devices = config.devices or [jax.devices()[0]]
+
+    # -- block codec (compression toggle) -----------------------------------
+    def _compress(self, amps: np.ndarray) -> bytes:
+        if not self.cfg.compression:
+            return np.asarray(amps, dtype=np.complex64).tobytes()
+        return compress_complex_block(amps, self.params,
+                                      prescan=self.cfg.prescan).payload
+
+    def _decompress(self, blob: bytes) -> np.ndarray:
+        if not self.cfg.compression:
+            return np.frombuffer(blob, dtype=np.complex64)
+        return decompress_complex_block(blob, self.params)
+
+    # -- initialization (§4.2 trick) -----------------------------------------
+    def _init_state(self) -> None:
+        bsz = 2 ** self.b
+        first = np.zeros(bsz, dtype=np.complex64)
+        first[0] = 1.0
+        self.store.put(0, self._compress(first))
+        n_blocks = 2 ** (self.n - self.b)
+        if n_blocks > 1:
+            zero = np.zeros(bsz, dtype=np.complex64)
+            self.store.put(1, self._compress(zero))
+            for blk in range(2, n_blocks):
+                self.store.put_alias(blk, 1)
+        self.stats.n_block_compressions += min(n_blocks, 2)
+
+    # -- main loop -------------------------------------------------------------
+    def run(self, collect_state: bool = True) -> np.ndarray | None:
+        t_start = time.perf_counter()
+        self._init_state()
+        n_workers = max(1, self.cfg.pipeline_depth)
+        with ThreadPoolExecutor(max_workers=n_workers) as dec_pool, \
+                ThreadPoolExecutor(max_workers=n_workers) as com_pool:
+            for layout, vgates in self._stages:
+                if vgates:
+                    self._run_stage(layout, vgates, dec_pool, com_pool)
+        self.stats.t_total = time.perf_counter() - t_start
+        self._snap_store_stats()
+        if collect_state:
+            return self._collect()
+        return None
+
+    def _run_stage(self, layout: GroupLayout, vgates: list[FusedGate],
+                   dec_pool: ThreadPoolExecutor,
+                   com_pool: ThreadPoolExecutor) -> None:
+        nv = layout.b + layout.m
+        plan = tuple((fg.qubits, fg.is_diagonal) for fg in vgates)
+        fn = _stage_fn(plan, nv, self.cfg.use_kernel)
+        mats = [
+            jnp.asarray(np.diag(fg.matrix) if diag else fg.matrix,
+                        dtype=jnp.complex64)
+            for fg, (_, diag) in zip(vgates, plan)
+        ]
+
+        block_ids = layout.group_block_ids()      # (G, 2^m)
+        n_groups = layout.n_groups
+        bsz = 2 ** layout.b
+
+        def load_group(g: int) -> np.ndarray:
+            t0 = time.perf_counter()
+            parts = [self._decompress(self.store.get(int(bid)))
+                     for bid in block_ids[g]]
+            self.stats.n_block_decompressions += len(parts)
+            out = np.concatenate(parts) if len(parts) > 1 else parts[0]
+            self.stats.t_decompress += time.perf_counter() - t0
+            return out
+
+        def save_group(g: int, amps: np.ndarray) -> None:
+            t0 = time.perf_counter()
+            blocks = np.asarray(amps).reshape(layout.blocks_per_group, bsz)
+            for i, bid in enumerate(block_ids[g]):
+                self.store.put(int(bid), self._compress(blocks[i]))
+            self.stats.n_block_compressions += layout.blocks_per_group
+            self.stats.t_compress += time.perf_counter() - t0
+
+        depth = max(1, self.cfg.pipeline_depth)
+        devices = self._devices
+        pending_load = {}
+        pending_save = []
+        for g in range(min(depth, n_groups)):
+            pending_load[g] = dec_pool.submit(load_group, g)
+
+        for g in range(n_groups):
+            amps = pending_load.pop(g).result()
+            nxt = g + depth
+            if nxt < n_groups:
+                pending_load[nxt] = dec_pool.submit(load_group, nxt)
+            t0 = time.perf_counter()
+            dev = devices[g % len(devices)]
+            amps_dev = jax.device_put(jnp.asarray(amps), dev)
+            out = fn(amps_dev, *mats)
+            out_np = np.asarray(out)          # blocks until device finishes
+            self.stats.t_compute += time.perf_counter() - t0
+            pending_save.append(com_pool.submit(save_group, g, out_np))
+
+        for fut in pending_save:               # stage barrier (§4.1 semantics)
+            fut.result()
+
+    def _snap_store_stats(self) -> None:
+        s = self.store.stats
+        self.stats.peak_ram_bytes = s.peak_ram_bytes
+        self.stats.peak_total_bytes = s.peak_total_bytes
+        self.stats.disk_bytes = s.disk_bytes
+        self.stats.n_spills = s.n_spills
+
+    def _collect(self) -> np.ndarray:
+        n_blocks = 2 ** (self.n - self.b)
+        parts = [self._decompress(self.store.get(blk))
+                 for blk in range(n_blocks)]
+        return np.concatenate(parts)
+
+    def close(self) -> None:
+        self.store.close()
+
+
+def simulate_bmqsim(circuit: Circuit, config: EngineConfig,
+                    collect_state: bool = True):
+    """Convenience wrapper: run and return (state, stats)."""
+    eng = BMQSimEngine(circuit, config)
+    try:
+        state = eng.run(collect_state=collect_state)
+        return state, eng.stats
+    finally:
+        eng.close()

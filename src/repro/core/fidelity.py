@@ -1,0 +1,28 @@
+"""Fidelity and error metrics (paper §5.3)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["fidelity", "norm", "max_pointwise_rel_error"]
+
+
+def fidelity(ideal, sim) -> float:
+    """|<ideal|sim>| — the paper's metric (Fig. 8)."""
+    ideal = jnp.asarray(ideal).reshape(-1)
+    sim = jnp.asarray(sim).reshape(-1).astype(ideal.dtype)
+    return float(jnp.abs(jnp.vdot(ideal, sim)))
+
+
+def norm(state) -> float:
+    return float(jnp.sqrt(jnp.sum(jnp.abs(jnp.asarray(state)) ** 2)))
+
+
+def max_pointwise_rel_error(x, xhat, zero_floor: float = 0.0) -> float:
+    """max |xhat - x| / |x| over elements with |x| > zero_floor."""
+    x = np.asarray(x, dtype=np.float64).reshape(-1)
+    xhat = np.asarray(xhat, dtype=np.float64).reshape(-1)
+    mask = np.abs(x) > zero_floor
+    if not mask.any():
+        return 0.0
+    return float(np.max(np.abs(xhat[mask] - x[mask]) / np.abs(x[mask])))

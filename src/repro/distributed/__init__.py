@@ -1,0 +1,4 @@
+from .sharding import (  # noqa: F401
+    TP_AXIS, dp_axes, param_pspecs, batch_pspecs, cache_pspecs,
+    named_shardings,
+)

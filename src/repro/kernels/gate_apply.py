@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: fused-gate application as an MXU GEMM.
+
+TPU adaptation of SV-Sim's scattered pair updates (DESIGN.md §2): after the
+host transposes the group tensor so the fused gate's k virtual qubits are
+the minor-most bits, applying the 2^k x 2^k unitary is
+
+    C = A @ B,   A: (R, K) group amplitudes, B = U^T: (K, K), K = 2^k.
+
+With the fusion width f = 7, K = 128 — one MXU tile.  Complex arithmetic
+runs as four real GEMMs over re/im planes (the MXU has no complex type):
+
+    Cr = Ar Br - Ai Bi,   Ci = Ar Bi + Ai Br.
+
+Grid: 1-D over row tiles of A; B is broadcast to every program instance
+and lives in VMEM for the whole call (K=128 => 2 * 64 KiB planes).
+A/C tiles are (TR, K) f32 in VMEM; TR = 256 keeps the working set
+(2*(TR*K) in + 2*(TR*K) out + 2*K*K weights) * 4 B ~= 1.2 MiB << 16 MiB VMEM.
+
+There is also a diagonal fast path (``diag_apply``): stage partitions of
+phase-heavy circuits (QFT's controlled-phase ladders) fuse into diagonal
+unitaries, for which the update is an elementwise complex multiply on the
+VPU — no MXU pass at all.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["gemm_planes", "diag_apply", "DEFAULT_ROW_TILE"]
+
+DEFAULT_ROW_TILE = 256
+
+
+def _gemm_kernel(ar_ref, ai_ref, br_ref, bi_ref, cr_ref, ci_ref):
+    ar = ar_ref[...]
+    ai = ai_ref[...]
+    br = br_ref[...]
+    bi = bi_ref[...]
+    dot = functools.partial(jnp.dot, preferred_element_type=jnp.float32)
+    cr_ref[...] = dot(ar, br) - dot(ai, bi)
+    ci_ref[...] = dot(ar, bi) + dot(ai, br)
+
+
+def gemm_planes(ar: jax.Array, ai: jax.Array, br: jax.Array, bi: jax.Array,
+                *, row_tile: int = DEFAULT_ROW_TILE,
+                interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """(R, K) x (K, K) complex GEMM over separate re/im f32 planes."""
+    R, K = ar.shape
+    assert br.shape == (K, K) and bi.shape == (K, K) and ai.shape == (R, K)
+    tr = min(row_tile, R)
+    while R % tr:       # R, tr are powers of two in every caller; keep safe
+        tr //= 2
+    grid = (R // tr,)
+    a_spec = pl.BlockSpec((tr, K), lambda i: (i, 0))
+    b_spec = pl.BlockSpec((K, K), lambda i: (0, 0))
+    out_spec = pl.BlockSpec((tr, K), lambda i: (i, 0))
+    out_shape = [jax.ShapeDtypeStruct((R, K), jnp.float32)] * 2
+    fn = pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[a_spec, a_spec, b_spec, b_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(ar, ai, br, bi)
+
+
+def _diag_kernel(ar_ref, ai_ref, dr_ref, di_ref, cr_ref, ci_ref):
+    ar = ar_ref[...]
+    ai = ai_ref[...]
+    dr = dr_ref[...]          # (1, K) broadcast row
+    di = di_ref[...]
+    cr_ref[...] = ar * dr - ai * di
+    ci_ref[...] = ar * di + ai * dr
+
+
+def diag_apply(ar: jax.Array, ai: jax.Array, dr: jax.Array, di: jax.Array,
+               *, row_tile: int = DEFAULT_ROW_TILE,
+               interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Elementwise complex multiply by a diagonal (1, K) — VPU path."""
+    R, K = ar.shape
+    tr = min(row_tile, R)
+    while R % tr:
+        tr //= 2
+    grid = (R // tr,)
+    a_spec = pl.BlockSpec((tr, K), lambda i: (i, 0))
+    d_spec = pl.BlockSpec((1, K), lambda i: (0, 0))
+    out_spec = pl.BlockSpec((tr, K), lambda i: (i, 0))
+    out_shape = [jax.ShapeDtypeStruct((R, K), jnp.float32)] * 2
+    fn = pl.pallas_call(
+        _diag_kernel,
+        grid=grid,
+        in_specs=[a_spec, a_spec, d_spec, d_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(ar, ai, dr.reshape(1, K), di.reshape(1, K))

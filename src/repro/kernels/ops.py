@@ -1,0 +1,111 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True (this container is CPU-only); on a real TPU
+deployment the same calls run compiled with ``interpret=False`` — the env
+var ``REPRO_PALLAS_COMPILED=1`` flips the default for the whole process.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..compression.pwrel import log_step
+from . import gate_apply as _ga
+from . import quantize as _qz
+
+__all__ = ["apply_fused_gate", "quantize_block", "dequantize_block",
+           "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_COMPILED", "0") != "1"
+
+
+# --------------------------------------------------------------------------
+# fused gate application (engine's use_kernel path)
+# --------------------------------------------------------------------------
+
+def apply_fused_gate(amps: jax.Array, mat: jax.Array,
+                     vqubits: tuple[int, ...], nv: int,
+                     diag: bool, *, interpret: bool | None = None) -> jax.Array:
+    """Apply a fused unitary to a flat 2^nv complex group array.
+
+    Host side does the qubit-minor transpose (an XLA copy); the Pallas
+    kernel does the arithmetic on re/im planes.
+    ``mat`` is the (2^k, 2^k) unitary — or its (2^k,) diagonal if ``diag``.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    k = len(vqubits)
+    K = 2 ** k
+    axes = [nv - 1 - q for q in vqubits]
+    rest = [a for a in range(nv) if a not in axes]
+    perm = rest + [axes[j] for j in range(k - 1, -1, -1)]
+    t = amps.reshape((2,) * nv).transpose(perm).reshape(-1, K)
+    ar, ai = jnp.real(t).astype(jnp.float32), jnp.imag(t).astype(jnp.float32)
+    if diag:
+        dr = jnp.real(mat).astype(jnp.float32)
+        di = jnp.imag(mat).astype(jnp.float32)
+        cr, ci = _ga.diag_apply(ar, ai, dr, di, interpret=interpret)
+    else:
+        b = mat.T  # C = A @ U^T
+        br = jnp.real(b).astype(jnp.float32)
+        bi = jnp.imag(b).astype(jnp.float32)
+        cr, ci = _ga.gemm_planes(ar, ai, br, bi, interpret=interpret)
+    out = (cr + 1j * ci).astype(amps.dtype)
+    inv = np.argsort(np.asarray(perm))
+    return out.reshape([2] * nv).transpose(list(inv)).reshape(-1)
+
+
+# --------------------------------------------------------------------------
+# pwrel quantize / dequantize (device half of the compressor)
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("step", "interpret"))
+def _quantize_jit(x2d, step, interpret):
+    max_abs = jnp.max(jnp.abs(x2d))
+    l_max = jnp.where(max_abs > 0,
+                      jnp.log2(jnp.maximum(max_abs, 1e-45)), 0.0)
+    l_max = l_max.reshape(1, 1).astype(jnp.float32)
+    codes, packed, flags = _qz.quantize_tiles(x2d, l_max, step,
+                                              interpret=interpret)
+    return codes, packed, flags, l_max
+
+
+def quantize_block(x: jax.Array, b_r: float,
+                   *, interpret: bool | None = None):
+    """f32 plane (N,) with N % 128 == 0 -> (codes u16 (N,), packed signs
+    (N/128, 4) i32, tile flags, l_max scalar)."""
+    if interpret is None:
+        interpret = default_interpret()
+    x = jnp.asarray(x, jnp.float32)
+    n = x.shape[0]
+    assert n % 128 == 0, f"plane size {n} not lane-aligned"
+    x2d = x.reshape(n // 128, 128)
+    codes, packed, flags, l_max = _quantize_jit(x2d, log_step(b_r), interpret)
+    return (codes.reshape(-1).astype(jnp.uint16), packed, flags,
+            l_max.reshape(()))
+
+
+@partial(jax.jit, static_argnames=("step", "interpret"))
+def _dequantize_jit(codes2d, packed, l_max, step, interpret):
+    return _qz.dequantize_tiles(codes2d, packed,
+                                l_max.reshape(1, 1).astype(jnp.float32),
+                                step, interpret=interpret)
+
+
+def dequantize_block(codes: jax.Array, packed_signs: jax.Array,
+                     l_max, b_r: float,
+                     *, interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = default_interpret()
+    codes = jnp.asarray(codes).astype(jnp.int32)
+    n = codes.shape[0]
+    out = _dequantize_jit(codes.reshape(n // 128, 128), packed_signs,
+                          jnp.asarray(l_max, jnp.float32), log_step(b_r),
+                          interpret)
+    return out.reshape(-1)

@@ -1,0 +1,135 @@
+"""Pallas TPU kernels: point-wise relative-error quantize / dequantize.
+
+The device-resident half of the paper's §4.3 compressor — the part whose
+bandwidth matters (the lossless stage runs on host, as bitcomp's does).
+
+Quantize, per (TR, 128) VMEM tile of a f32 plane (VPU elementwise work):
+
+  1. sign bits  s = x < 0
+  2. codes      c = CODE_MAX - round((l_max - log2|x|)/step), 0 = exact zero
+  3. sign bitmap packed 32 lanes -> one int32 word (4 words / 128 lanes) —
+     the TPU analogue of the paper's warp-ballot pack
+  4. per-tile uniformity flags (all-zero codes / all-0 signs / all-1 signs)
+     — the "pre-scan" that lets the host RLE uniform bitmap chunks without
+     touching them again.
+
+``l_max`` (the block's max log2|x|) is a scalar prologue computed by XLA
+(one fused reduction) and passed in as a (1, 1) operand.
+
+Dequantize is the inverse: codes + unpacked signs + l_max -> f32 plane.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..compression.pwrel import CODE_MAX
+
+__all__ = ["quantize_tiles", "dequantize_tiles", "DEFAULT_TILE_ROWS"]
+
+DEFAULT_TILE_ROWS = 8          # (8, 128) f32 = one native VREG tile
+_LANES = 128
+_WORDS = _LANES // 32          # packed int32 bitmap words per row
+
+
+def _quantize_kernel(step: float, x_ref, lmax_ref, codes_ref, packed_ref,
+                     flags_ref):
+    x = x_ref[...]                                   # (TR, 128) f32
+    l_max = lmax_ref[0, 0]
+    absx = jnp.abs(x)
+    signs = x < 0.0
+
+    L = jnp.log2(jnp.maximum(absx, 1e-45))
+    d = jnp.round((l_max - L) / jnp.float32(step))
+    codes_f = jnp.float32(CODE_MAX) - d
+    codes_f = jnp.where(absx <= 0.0, 0.0, codes_f)
+    codes = jnp.clip(codes_f, 0.0, float(CODE_MAX)).astype(jnp.int32)
+    codes_ref[...] = codes
+
+    # -- ballot-style bitmap pack: 32 lanes -> int32 word -------------------
+    tr = x.shape[0]
+    sbits = signs.astype(jnp.int32).reshape(tr, _WORDS, 32)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (tr, _WORDS, 32), 2)
+    packed_ref[...] = jnp.sum(sbits << lane, axis=-1).astype(jnp.int32)
+
+    # -- per-tile uniformity flags (pre-scan) --------------------------------
+    all_zero = jnp.all(codes == 0).astype(jnp.int32)
+    sign_none = jnp.all(~signs).astype(jnp.int32)
+    sign_all = jnp.all(signs).astype(jnp.int32)
+    flags_ref[0, 0] = all_zero
+    flags_ref[0, 1] = sign_none
+    flags_ref[0, 2] = sign_all
+
+
+def quantize_tiles(x: jax.Array, l_max: jax.Array, step: float,
+                   *, tile_rows: int = DEFAULT_TILE_ROWS,
+                   interpret: bool = True):
+    """x: (rows, 128) f32; l_max: (1,1) f32 -> (codes i32, packed i32, flags)."""
+    rows, lanes = x.shape
+    assert lanes == _LANES, f"plane must be (rows, {_LANES}), got {x.shape}"
+    tr = min(tile_rows, rows)
+    while rows % tr:
+        tr //= 2
+    grid = (rows // tr,)
+    fn = pl.pallas_call(
+        lambda *refs: _quantize_kernel(step, *refs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tr, _LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tr, _LANES), lambda i: (i, 0)),
+            pl.BlockSpec((tr, _WORDS), lambda i: (i, 0)),
+            pl.BlockSpec((1, 3), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, _LANES), jnp.int32),
+            jax.ShapeDtypeStruct((rows, _WORDS), jnp.int32),
+            jax.ShapeDtypeStruct((rows // tr, 3), jnp.int32),
+        ],
+        interpret=interpret,
+    )
+    return fn(x, l_max)
+
+
+def _dequantize_kernel(step: float, codes_ref, packed_ref, lmax_ref, x_ref):
+    codes = codes_ref[...]                           # (TR, 128) i32
+    l_max = lmax_ref[0, 0]
+    tr = codes.shape[0]
+    packed = packed_ref[...]                         # (TR, 4) i32
+    lane = jax.lax.broadcasted_iota(jnp.int32, (tr, _WORDS, 32), 2)
+    sbits = (packed[:, :, None] >> lane) & 1
+    signs = sbits.reshape(tr, _LANES) == 1
+
+    d = jnp.float32(CODE_MAX) - codes.astype(jnp.float32)
+    mag = jnp.exp2(l_max - d * jnp.float32(step))
+    mag = jnp.where(codes == 0, 0.0, mag)
+    x_ref[...] = jnp.where(signs, -mag, mag).astype(jnp.float32)
+
+
+def dequantize_tiles(codes: jax.Array, packed_signs: jax.Array,
+                     l_max: jax.Array, step: float,
+                     *, tile_rows: int = DEFAULT_TILE_ROWS,
+                     interpret: bool = True) -> jax.Array:
+    """codes (rows,128) i32 + packed signs (rows,4) i32 -> (rows,128) f32."""
+    rows, lanes = codes.shape
+    assert lanes == _LANES
+    tr = min(tile_rows, rows)
+    while rows % tr:
+        tr //= 2
+    grid = (rows // tr,)
+    fn = pl.pallas_call(
+        lambda *refs: _dequantize_kernel(step, *refs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tr, _LANES), lambda i: (i, 0)),
+            pl.BlockSpec((tr, _WORDS), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tr, _LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, _LANES), jnp.float32),
+        interpret=interpret,
+    )
+    return fn(codes, packed_signs, l_max)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose vs these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..compression.pwrel import CODE_MAX
+
+__all__ = [
+    "gemm_planes_ref", "diag_apply_ref",
+    "quantize_tiles_ref", "dequantize_tiles_ref",
+]
+
+_LANES = 128
+_WORDS = 4
+
+
+def gemm_planes_ref(ar, ai, br, bi):
+    cr = ar @ br - ai @ bi
+    ci = ar @ bi + ai @ br
+    return cr.astype(jnp.float32), ci.astype(jnp.float32)
+
+
+def diag_apply_ref(ar, ai, dr, di):
+    dr = dr.reshape(1, -1)
+    di = di.reshape(1, -1)
+    cr = ar * dr - ai * di
+    ci = ar * di + ai * dr
+    return cr.astype(jnp.float32), ci.astype(jnp.float32)
+
+
+def quantize_tiles_ref(x, l_max, step, tile_rows: int = 8):
+    """Mirror of quantize.quantize_tiles (same f32 arithmetic, same layout)."""
+    rows, lanes = x.shape
+    assert lanes == _LANES
+    l_max = jnp.asarray(l_max).reshape(())
+    absx = jnp.abs(x)
+    signs = x < 0.0
+    L = jnp.log2(jnp.maximum(absx, 1e-45))
+    d = jnp.round((l_max - L) / jnp.float32(step))
+    codes_f = jnp.float32(CODE_MAX) - d
+    codes_f = jnp.where(absx <= 0.0, 0.0, codes_f)
+    codes = jnp.clip(codes_f, 0.0, float(CODE_MAX)).astype(jnp.int32)
+
+    sbits = signs.astype(jnp.int32).reshape(rows, _WORDS, 32)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (rows, _WORDS, 32), 2)
+    packed = jnp.sum(sbits << lane, axis=-1).astype(jnp.int32)
+
+    tr = min(tile_rows, rows)
+    while rows % tr:
+        tr //= 2
+    n_tiles = rows // tr
+    codes_t = codes.reshape(n_tiles, tr * _LANES)
+    signs_t = signs.reshape(n_tiles, tr * _LANES)
+    flags = jnp.stack([
+        jnp.all(codes_t == 0, axis=1),
+        jnp.all(~signs_t, axis=1),
+        jnp.all(signs_t, axis=1),
+    ], axis=1).astype(jnp.int32)
+    return codes, packed, flags
+
+
+def dequantize_tiles_ref(codes, packed_signs, l_max, step):
+    rows = codes.shape[0]
+    l_max = jnp.asarray(l_max).reshape(())
+    lane = jax.lax.broadcasted_iota(jnp.int32, (rows, _WORDS, 32), 2)
+    sbits = (packed_signs[:, :, None] >> lane) & 1
+    signs = sbits.reshape(rows, _LANES) == 1
+    d = jnp.float32(CODE_MAX) - codes.astype(jnp.float32)
+    mag = jnp.exp2(l_max - d * jnp.float32(step))
+    mag = jnp.where(codes == 0, 0.0, mag)
+    return jnp.where(signs, -mag, mag).astype(jnp.float32)

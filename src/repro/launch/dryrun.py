@@ -1,0 +1,364 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines, before ANY other import (incl. repro.*):
+#   jax locks the device count on first init.
+
+__doc__ = """Multi-pod dry-run (deliverable e): lower + compile every assigned
+(architecture x input shape) cell on the production meshes and extract
+the roofline terms from the compiled artifact.
+
+Per cell:
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., out_shardings=...)\
+                      .lower(*abstract_args)
+        compiled = lowered.compile()
+        memory_analysis(), cost_analysis()      -> EXPERIMENTS.md §Dry-run
+        collective bytes parsed from HLO        -> §Roofline
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+        --shape train_4k [--multi-pod] [--compressed-kv] [--out out.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ALIASES, get_config
+from ..configs.shapes import (SHAPES, cell_is_applicable, input_specs,
+                              skip_reason, step_kind)
+from ..distributed.sharding import (batch_pspecs, cache_pspecs, dp_axes,
+                                    named_shardings, param_pspecs)
+from ..models import encdec as E
+from ..models import transformer as T
+from ..optim import make_optimizer
+from ..serving.kvcache import compress_prefill_cache
+from ..serving.step import make_decode_step, make_prefill_step
+from ..train.step import init_train_state, make_loss_fn, make_train_step
+from .mesh import make_production_mesh
+
+# TPU v5e constants (assignment §ROOFLINE ANALYSIS)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[-a-z0-9.]*\(", re.I)
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|u16|s16|f64|pred|s64|u64)"
+                       r"\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "bf16": 2, "f16": 2, "u16": 2, "s16": 2, "s8": 1, "u8": 1,
+          "pred": 1}
+
+
+def collective_bytes_from_hlo(hlo: str) -> dict:
+    """Sum output-operand bytes of every collective op in HLO text."""
+    per_op: dict[str, int] = {}
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1).lower()
+        # output shape(s): text before the op name, e.g. "x = bf16[..] all-reduce("
+        lhs = line.split(m.group(0))[0]
+        nbytes = 0
+        for dm in _SHAPE_RE.finditer(lhs):
+            dtype, dims = dm.group(1), dm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _BYTES[dtype]
+        per_op[op] = per_op.get(op, 0) + nbytes
+    per_op["total"] = sum(per_op.values())
+    return per_op
+
+
+def abstract_params(cfg):
+    init = (E.init_encdec_params if cfg.family == "audio" else T.init_params)
+    return jax.eval_shape(lambda: init(cfg, jax.random.PRNGKey(0)))
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE); decode counts D = batch tokens."""
+    sp = SHAPES[shape_name]
+    n = cfg.param_count(active_only=True)
+    if sp.kind == "train":
+        tokens = sp.global_batch * (sp.seq_len if cfg.family != "audio"
+                                    else sp.seq_len // 4 + cfg.encoder.dec_len)
+        return 6.0 * n * tokens
+    if sp.kind == "prefill":
+        tokens = sp.global_batch * (sp.seq_len if cfg.family != "audio"
+                                    else sp.seq_len // 4 + cfg.encoder.dec_len)
+        return 2.0 * n * tokens
+    return 2.0 * n * sp.global_batch     # decode: one token per sequence
+
+
+# hillclimb variants (EXPERIMENTS.md §Perf): config overrides per name
+VARIANTS = {
+    "baseline": {},
+    "seqattn": {"seq_parallel_attn": True},
+    "banded": {"banded_local_attn": True},
+    "banded+seqattn": {"banded_local_attn": True, "seq_parallel_attn": True},
+    "optbf16": {"opt_state_dtype": "bfloat16"},
+    "noremat": {"remat": False},
+    "adafactor": {"optimizer": "adafactor"},
+}
+
+
+def build_cell(arch: str, shape_name: str, mesh, compressed_kv=False,
+               unroll=False, n_layers_override=None, variant="baseline"):
+    """Returns (fn, args, in_shardings, out_shardings) ready to lower."""
+    cfg = get_config(arch)
+    if VARIANTS.get(variant):
+        cfg = cfg.with_(**VARIANTS[variant])
+    if unroll:
+        cfg = cfg.with_(scan_layers=False)
+    if n_layers_override is not None:
+        cfg = cfg.with_(n_layers=n_layers_override)
+        if cfg.encoder is not None:
+            # encoder depth must scale with the SAME unit count as the
+            # decoder so the X(2)/X(3) extrapolation covers both stacks
+            units = max(1, n_layers_override // len(cfg.pattern))
+            cfg = cfg.with_(encoder=__import__("dataclasses").replace(
+                cfg.encoder, n_layers=units))
+    kind = step_kind(shape_name)
+    specs = input_specs(cfg, shape_name)
+    params = abstract_params(cfg)
+    p_specs = param_pspecs(cfg, params, mesh)
+    b_specs = batch_pspecs(cfg, specs, mesh)
+    repl = P()
+
+    if kind == "train":
+        opt = make_optimizer(cfg.optimizer, 3e-4,
+                             moment_dtype=cfg.opt_state_dtype)
+        state = jax.eval_shape(lambda: init_train_state(cfg, params, opt))
+        if cfg.optimizer == "adafactor":
+            dp = dp_axes(mesh)
+            dpz = 1
+            for a in dp:
+                dpz *= mesh.shape[a]
+            f_specs = jax.tree.map(
+                lambda leaf: (P(dp) if leaf.ndim >= 1 and leaf.shape and
+                              leaf.shape[0] % dpz == 0 else P()),
+                state["opt"]["f"])
+            s_specs = {"opt": {"f": f_specs, "step": repl}}
+        else:
+            s_specs = {"opt": {"m": p_specs, "v": p_specs, "step": repl}}
+        step = make_train_step(cfg, opt)
+        in_sh = (p_specs, s_specs, b_specs)
+        out_sh = (p_specs, s_specs, {"loss": repl, "grad_norm": repl})
+        args = (params, state, specs)
+        fn = step
+    elif kind == "prefill":
+        sp = SHAPES[shape_name]
+        fn = make_prefill_step(cfg, max_len=sp.seq_len)
+        # cache out-sharding: same rules as decode cache
+        out_cache = jax.eval_shape(fn, params, specs)[1]
+        c_specs = cache_pspecs(cfg, out_cache, mesh, sp.global_batch)
+        dp = dp_axes(mesh)
+        dpz = 1
+        for a in dp:
+            dpz *= mesh.shape[a]
+        v_ax = "model" if cfg.vocab % mesh.shape["model"] == 0 else None
+        logits_spec = P(dp if sp.global_batch % dpz == 0 else None, v_ax)
+        in_sh = (p_specs, b_specs)
+        out_sh = (logits_spec, c_specs)
+        args = (params, specs)
+    else:  # decode
+        sp = SHAPES[shape_name]
+        if compressed_kv:
+            specs = dict(specs)
+            specs["cache"] = jax.eval_shape(compress_prefill_cache,
+                                            specs["cache"])
+            b_specs = batch_pspecs(cfg, specs, mesh)
+        fn = make_decode_step(cfg)
+        dp = dp_axes(mesh)
+        dpz = 1
+        for a in dp:
+            dpz *= mesh.shape[a]
+        v_ax = "model" if cfg.vocab % mesh.shape["model"] == 0 else None
+        logits_spec = P(dp if sp.global_batch % dpz == 0 else None, v_ax)
+        in_sh = (p_specs, b_specs)
+        out_sh = (logits_spec, b_specs["cache"])
+        args = (params, specs)
+
+    return fn, args, in_sh, out_sh
+
+
+def _compile_once(arch, shape_name, mesh, compressed_kv, unroll,
+                  n_layers_override=None, variant="baseline"):
+    fn, args, in_sh, out_sh = build_cell(arch, shape_name, mesh,
+                                         compressed_kv, unroll,
+                                         n_layers_override, variant)
+    # donation: train updates (params, opt state) in place; decode updates
+    # the KV cache in place — without it XLA double-buffers the largest
+    # arrays (qwen1.5 decode: 40 GiB/device observed -> ~2x less donated)
+    kind = step_kind(shape_name)
+    donate = (0, 1) if kind == "train" else ((1,) if kind == "decode" else ())
+    jitted = jax.jit(fn,
+                     in_shardings=named_shardings(in_sh, mesh),
+                     out_shardings=named_shardings(out_sh, mesh),
+                     donate_argnums=donate)
+    lowered = jitted.lower(*args)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    return {
+        "compiled": compiled,
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": collective_bytes_from_hlo(compiled.as_text()),
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             compressed_kv: bool = False, unroll: bool = False,
+             variant: str = "baseline", verbose: bool = True) -> dict:
+    """Roofline terms via the paired-compile scan correction: XLA's
+    analytical cost model counts while-loop (scan) bodies ONCE, so we
+    compile (A) the production scanned program -> outside + body, and
+    (C) a cheap 2-unit unrolled variant -> outside + 2*body, and
+    reconstruct  total = A*(2-U) + C*(U-1)  for every linear quantity
+    (FLOPs, bytes accessed, per-collective bytes).  A is also the
+    memory-fit/compile-success artifact.  ``unroll=True`` instead unrolls
+    the full depth (exact, but ~25x slower compiles; used to validate the
+    correction — see EXPERIMENTS.md §Method)."""
+    cfg = get_config(arch)
+    if not cell_is_applicable(cfg, shape_name):
+        return {"arch": arch, "shape": shape_name,
+                "skipped": skip_reason(cfg, shape_name)}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        A = _compile_once(arch, shape_name, mesh, compressed_kv, unroll,
+                          variant=variant)
+        t_lower = time.time() - t0
+        U = cfg.n_units
+        if unroll or U <= 1:
+            flops, bytes_accessed, coll = A["flops"], A["bytes"], A["coll"]
+        else:
+            # X(k) = outside + k*(per-unit cost) for UNROLLED k-unit programs
+            # -> X(U) = X(2) + (U-2)*(X(3) - X(2)).  (The scanned program A
+            # can't enter this model: its loop inputs carry all U units'
+            # params/caches at once.)  A still provides memory_analysis +
+            # the production compile proof.
+            pat, rem = len(cfg.pattern), cfg.n_remainder
+            C = _compile_once(arch, shape_name, mesh, compressed_kv,
+                              unroll=True, n_layers_override=2 * pat + rem,
+                              variant=variant)
+            D = _compile_once(arch, shape_name, mesh, compressed_kv,
+                              unroll=True, n_layers_override=3 * pat + rem,
+                              variant=variant)
+            ext = lambda c, d: c + (U - 2.0) * (d - c)  # noqa: E731
+            flops = ext(C["flops"], D["flops"])
+            bytes_accessed = ext(C["bytes"], D["bytes"])
+            keys = set(C["coll"]) | set(D["coll"])
+            coll = {k: max(0, int(ext(C["coll"].get(k, 0),
+                                      D["coll"].get(k, 0))))
+                    for k in keys}
+        t_compile = time.time() - t0 - t_lower
+
+    compiled = A["compiled"]
+    mem = compiled.memory_analysis()
+
+    # NOTE: the compiled artifact is the per-device SPMD module, so
+    # cost_analysis() FLOPs/bytes and the HLO collective sizes are all
+    # PER-DEVICE quantities.  total = per_device * n_chips.
+    compute_s = flops / PEAK_FLOPS                  # = total/(chips*peak)
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll["total"] / ICI_BW
+    mf = model_flops(cfg, shape_name)
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "compressed_kv": compressed_kv,
+        "variant": variant,
+        "step_kind": step_kind(shape_name),
+        "hlo_flops_per_device": flops,
+        "hlo_flops": flops * n_chips,
+        "hlo_bytes_per_device": bytes_accessed,
+        "hlo_bytes": bytes_accessed * n_chips,
+        "collective_bytes": coll,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": max(
+            [("compute", compute_s), ("memory", memory_s),
+             ("collective", collective_s)], key=lambda kv: kv[1])[0],
+        "model_flops": mf,
+        "useful_flops_ratio": mf / (flops * n_chips) if flops else 0.0,
+        "bytes_per_device": {
+            "argument": getattr(mem, "argument_size_in_bytes", None),
+            "output": getattr(mem, "output_size_in_bytes", None),
+            "temp": getattr(mem, "temp_size_in_bytes", None),
+            "peak": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "t_lower_s": round(t_lower, 1),
+        "t_compile_s": round(t_compile, 1),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} ({rec['mesh']}"
+              f"{' +ckv' if compressed_kv else ''}"
+              f"{'' if variant == 'baseline' else ' +' + variant}): "
+              f"compute {compute_s*1e3:.2f}ms memory {memory_s*1e3:.2f}ms "
+              f"collective {collective_s*1e3:.2f}ms -> {rec['bottleneck']}"
+              f" | peak/dev {(rec['bytes_per_device']['peak'] or 0)/2**30:.2f}"
+              f"GiB | compile {t_compile:.0f}s", flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--compressed-kv", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll layer scans for exact roofline accounting")
+    ap.add_argument("--variant", default="baseline", choices=list(VARIANTS))
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for arch in ALIASES:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch/--shape or --all required")
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    for arch, shape in cells:
+        try:
+            results.append(run_cell(arch, shape, multi_pod=args.multi_pod,
+                                    compressed_kv=args.compressed_kv,
+                                    unroll=args.unroll,
+                                    variant=args.variant))
+        except Exception as exc:  # noqa: BLE001 — report, keep sweeping
+            print(f"[dryrun] {arch} x {shape} FAILED: {exc}", flush=True)
+            results.append({"arch": arch, "shape": shape,
+                            "error": f"{type(exc).__name__}: {exc}"})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+    n_err = sum(1 for r in results if "error" in r)
+    print(f"[dryrun] {len(results)} cells, {n_err} failures", flush=True)
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,66 @@
+"""Production train launcher: mesh + sharded params + fault-tolerant loop.
+
+On this container it runs reduced configs over host devices; on a real
+pod-slice the same entry point runs the full config (the dry-run proves
+the full-config lowering).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b \
+        --steps 50 --mesh 2x4 [--full] [--grad-compress]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from ..configs import get_config, reduced_config
+from ..distributed.sharding import named_shardings, param_pspecs
+from ..models import transformer as T
+from ..optim import GradCompressor, make_optimizer
+from ..train.data import SyntheticTokens
+from ..train.runtime import RuntimeConfig, TrainRuntime
+from ..train.step import init_train_state, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--mesh", default="1x1", help="DATAxMODEL")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = reduced_config(cfg)
+    d, m = map(int, args.mesh.split("x"))
+    mesh = jax.make_mesh((d, m), ("data", "model"))
+
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    pspecs = param_pspecs(cfg, params, mesh)
+    params = jax.device_put(params, named_shardings(pspecs, mesh))
+    opt = make_optimizer(cfg.optimizer, 3e-3,
+                         moment_dtype=cfg.opt_state_dtype)
+    gc = GradCompressor(1e-2) if args.grad_compress else None
+    state = init_train_state(cfg, params, opt, gc)
+    step_fn = jax.jit(make_train_step(cfg, opt, gc))
+    src = SyntheticTokens(vocab=cfg.vocab, seq_len=args.seq,
+                          global_batch=args.batch)
+
+    rt = TrainRuntime(cfg=RuntimeConfig(ckpt_dir=args.ckpt_dir,
+                                        ckpt_every=25),
+                      train_step=step_fn, data_source=src)
+    with jax.set_mesh(mesh):
+        params, state, hist = rt.run(params, state, n_steps=args.steps)
+    losses = [m_["loss"] for m_ in hist]
+    print(f"[train] {args.arch} mesh={args.mesh}: "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({np.mean([m_['step_time'] for m_ in hist])*1e3:.0f} ms/step)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

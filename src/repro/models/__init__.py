@@ -1,0 +1,2 @@
+"""LM model framework: configs, layers, assemblies (decoder-only + enc-dec)."""
+from .config import EncoderConfig, ModelConfig, MoEConfig  # noqa: F401

@@ -1,0 +1,236 @@
+"""GQA attention: full-sequence (train/prefill), decode-with-cache, cross.
+
+Covers every assigned variant: GQA group sizes from MQA (granite kv=1) to
+MHA (qwen1.5 kv=40), qk-norm (qwen3), QKV bias (qwen1.5), sliding windows
+(mixtral SWA, gemma3 / recurrentgemma local layers), cross-attention
+(llama-vision, whisper decoder).
+
+Softmax always accumulates in f32; activations are bf16.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Param, dense_init, rms_norm, rope, rope_cos_sin
+
+__all__ = ["init_attn_params", "attention_full", "attention_decode",
+           "attention_cross", "init_cache", "update_cache"]
+
+NEG_INF = -2.0 ** 30  # large-negative mask in f32 (avoids bf16 -inf NaNs)
+
+
+def init_attn_params(p: Param, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    prm = {
+        "wq": dense_init(p.next(), (d, cfg.n_heads * hd), dtype=dtype),
+        "wk": dense_init(p.next(), (d, cfg.n_kv_heads * hd), dtype=dtype),
+        "wv": dense_init(p.next(), (d, cfg.n_kv_heads * hd), dtype=dtype),
+        "wo": dense_init(p.next(), (cfg.n_heads * hd, d), in_axis=0,
+                         dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        prm["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        prm["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        prm["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    if cfg.qk_norm:
+        prm["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        prm["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return prm
+
+
+def _project_qkv(x, prm, cfg: ModelConfig):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = x @ prm["wq"]
+    k = x @ prm["wk"]
+    v = x @ prm["wv"]
+    if cfg.qkv_bias:
+        q = q + prm["bq"]
+        k = k + prm["bk"]
+        v = v + prm["bv"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, prm["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, prm["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _gqa_scores(q, k, cfg: ModelConfig):
+    """q (B,S,Hq,hd), k (B,T,G,hd) -> scores (B,G,rep,S,T) f32."""
+    B, S, Hq, hd = q.shape
+    G = cfg.n_kv_heads
+    q = q.reshape(B, S, G, cfg.n_rep, hd)
+    scores = jnp.einsum("bsgrd,btgd->bgrst", q, k,
+                        preferred_element_type=jnp.float32)
+    return scores * (hd ** -0.5)
+
+
+def _gqa_out(probs, v, cfg: ModelConfig):
+    """probs (B,G,rep,S,T) f32, v (B,T,G,hd) -> (B,S,Hq*hd)."""
+    B, G, rep, S, T = probs.shape
+    out = jnp.einsum("bgrst,btgd->bsgrd", probs.astype(v.dtype), v)
+    return out.reshape(B, S, G * rep * v.shape[-1])
+
+
+def attention_full(x, prm, cfg: ModelConfig, positions, *,
+                   window: int = 0, causal: bool = True):
+    """Train/prefill self-attention. Returns (out, (k, v)) for caching."""
+    q, k, v = _project_qkv(x, prm, cfg)
+    cos, sin = rope_cos_sin(positions, cfg.hd, cfg.rope_theta)
+    q = rope(q, cos, sin)
+    k = rope(k, cos, sin)
+
+    S = x.shape[1]
+    if (cfg.banded_local_attn and window and S % window == 0
+            and S >= 2 * window and positions.ndim == 1):
+        out = _banded_window_attention(q, k, v, cfg, window) @ prm["wo"]
+        return out, (k, v)
+
+    if cfg.seq_parallel_attn:
+        # KV-parallel attention: shard the KEY/VALUE sequence dim over
+        # "model" instead of heads.  When G < TP, head sharding leaves an
+        # S x S scores replica + a spurious all-reduce (56 GiB f32/layer at
+        # 32k prefill, arctic).  With T sharded: scores (.., S, T/tp) are
+        # partitioned with NO comm, softmax over T all-reduces only the
+        # (B,G,r,S) max/sum stats, and the out einsum pays one
+        # row-parallel activation all-reduce — O(S·d), not O(S²).
+        from .layers import maybe_constrain
+        k = maybe_constrain(k, None, "model", None, None)
+        v = maybe_constrain(v, None, "model", None, None)
+    scores = _gqa_scores(q, k, cfg)                       # (B,G,r,S,T)
+    if cfg.seq_parallel_attn:
+        from .layers import maybe_constrain
+        scores = maybe_constrain(scores, None, None, None, None, "model")
+    i = positions[..., :, None]
+    j = positions[..., None, :]
+    mask = jnp.ones((S, S), bool) if not causal else (i >= j)
+    if window:
+        mask = mask & (i - j < window)
+    if mask.ndim == 2:               # positions was (S,) -> add batch dim
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, v, cfg) @ prm["wo"]
+    return out, (k, v)
+
+
+def _banded_window_attention(q, k, v, cfg: ModelConfig, W: int):
+    """Sliding-window attention computed block-banded: each W-sized query
+    block attends only to [its own block (causal) | the previous block],
+    so score buffers are (S, 2W) not (S, S) and FLOPs scale with S*W.
+
+    q: (B,S,Hq,hd), k/v: (B,S,G,hd) -> (B,S,Hq*hd).
+    """
+    B, S, Hq, hd = q.shape
+    G = cfg.n_kv_heads
+    rep = cfg.n_rep
+    nb = S // W
+    qb = q.reshape(B, nb, W, G, rep, hd)
+    kb = k.reshape(B, nb, W, G, hd)
+    vb = v.reshape(B, nb, W, G, hd)
+    # previous block of k/v (block 0 gets zeros + full mask)
+    kp = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    vp = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+
+    scale = hd ** -0.5
+    s_self = jnp.einsum("bnwgrd,bnxgd->bngrwx", qb, kb,
+                        preferred_element_type=jnp.float32) * scale
+    s_prev = jnp.einsum("bnwgrd,bnxgd->bngrwx", qb, kp,
+                        preferred_element_type=jnp.float32) * scale
+    qi = jnp.arange(W)[:, None]
+    kj = jnp.arange(W)[None, :]
+    s_self = jnp.where(qi >= kj, s_self, NEG_INF)         # causal in-block
+    # prev-block distance = W + qi - kj < W  <=>  qi < kj
+    m_prev = (qi < kj)[None, None, None, None]            # (1,1,1,1,W,W)
+    blk0 = (jnp.arange(nb) != 0)[None, :, None, None, None, None]
+    s_prev = jnp.where(m_prev & blk0, s_prev, NEG_INF)
+
+    s = jnp.concatenate([s_prev, s_self], axis=-1)        # (B,nb,G,r,W,2W)
+    p = jax.nn.softmax(s, axis=-1)
+    p_prev, p_self = p[..., :W], p[..., W:]
+    o = (jnp.einsum("bngrwx,bnxgd->bnwgrd", p_prev.astype(v.dtype), vp)
+         + jnp.einsum("bngrwx,bnxgd->bnwgrd", p_self.astype(v.dtype), vb))
+    return o.reshape(B, S, Hq * hd)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int,
+               dtype=jnp.bfloat16) -> dict:
+    """Stacked KV cache for n_layers of one kind: (L, B, T, G, hd)."""
+    shape = (n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def update_cache(cache_k, cache_v, k, v, pos):
+    """Write (B,S,G,hd) at sequence offset ``pos`` (scalar)."""
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+    return cache_k, cache_v
+
+
+def attention_decode(x, prm, cfg: ModelConfig, cache_k, cache_v, pos, *,
+                     window: int = 0):
+    """One-token decode: x (B,1,d) against cache (B,T,G,hd) at offset pos.
+
+    RING MODE (sliding-window layers at long context): when the cache is
+    exactly ``window`` slots, it is treated as a ring buffer — slot
+    ``pos % window`` is overwritten and all written slots attend (keys are
+    already RoPE'd, and softmax is permutation-invariant over slots, so
+    slot order never matters).  This keeps a local layer's cache O(window)
+    instead of O(context): gemma3 @ 500k context would otherwise need a
+    2.1 GB cache *per local layer*.
+
+    Returns (out, new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    T = cache_k.shape[1]
+    ring = bool(window) and T == window
+    q, k, v = _project_qkv(x, prm, cfg)
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    cos, sin = rope_cos_sin(posv, cfg.hd, cfg.rope_theta)
+    q = rope(q, cos, sin)
+    k = rope(k, cos, sin)
+    slot = jnp.mod(pos, T) if ring else pos
+    cache_k, cache_v = update_cache(cache_k, cache_v, k, v, slot)
+
+    scores = _gqa_scores(q, cache_k, cfg)                 # (B,G,r,1,T)
+    j = jnp.arange(T)
+    if ring:
+        mask = (j <= pos)                 # warm-up: only written slots
+        mask = mask | (pos >= T)          # steady state: every slot in-window
+    else:
+        mask = j <= pos
+        if window:
+            mask = mask & (pos - j < window)
+    scores = jnp.where(mask[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, cache_v, cfg) @ prm["wo"]
+    return out, cache_k, cache_v
+
+
+def attention_cross(x, prm, cfg: ModelConfig, kv_src=None,
+                    kv_cache: tuple | None = None):
+    """Cross-attention: queries from x, keys/values from encoder output
+    ``kv_src`` (B, T_enc, d) — or a precomputed (k, v) pair in decode."""
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = (x @ prm["wq"]).reshape(B, S, cfg.n_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, prm["q_norm"], cfg.norm_eps)
+    if kv_cache is not None:
+        k, v = kv_cache
+    else:
+        T = kv_src.shape[1]
+        k = (kv_src @ prm["wk"]).reshape(B, T, cfg.n_kv_heads, hd)
+        v = (kv_src @ prm["wv"]).reshape(B, T, cfg.n_kv_heads, hd)
+        if cfg.qk_norm:
+            k = rms_norm(k, prm["k_norm"], cfg.norm_eps)
+    scores = _gqa_scores(q, k, cfg)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, v, cfg) @ prm["wo"]
+    return out, (k, v)

@@ -1,0 +1,87 @@
+"""Primitive layers: norms, RoPE, initializers (pure functions on pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["rms_norm", "rope", "rope_cos_sin", "dense_init", "Param",
+           "maybe_constrain"]
+
+
+def maybe_constrain(x: jax.Array, *spec) -> jax.Array:
+    """Best-effort sharding constraint: applies only to axes that exist in
+    the ambient mesh and divide the dim; silently a no-op on CPU/1-device
+    (tests) so model code stays mesh-agnostic."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
+        fixed = []
+        for dim, ax in zip(x.shape, spec):
+            if ax is None:
+                fixed.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            if not all(a in mesh.axis_names for a in axes):
+                fixed.append(None)
+                continue
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            fixed.append(ax if (size > 1 and dim % size == 0) else None)
+        if all(f is None for f in fixed):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(*fixed))
+    except Exception:
+        return x
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int,
+                 theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions (..., S) int -> cos/sin (..., S, head_dim/2) f32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, hd); cos/sin: (B, S, hd/2) or (S, hd/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    while cos.ndim < x.ndim:         # (S, hd/2) or (B, S, hd/2) -> (B,S,1,hd/2)
+        cos = cos[..., None, :] if cos.ndim == x.ndim - 1 else cos[None]
+        sin = sin[..., None, :] if sin.ndim == x.ndim - 1 else sin[None]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    return jnp.concatenate([o1, o2], axis=-1).astype(x.dtype)
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.bfloat16):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else int(
+        np.prod([shape[a] for a in in_axis]))
+    std = (1.0 / max(1, fan_in)) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+class Param:
+    """Tiny helper to build param dicts with per-leaf PRNG splitting."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def next(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub

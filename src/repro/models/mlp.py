@@ -1,0 +1,30 @@
+"""Feed-forward blocks: SwiGLU (llama-family) / GeLU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Param, dense_init
+
+__all__ = ["init_mlp_params", "mlp"]
+
+
+def init_mlp_params(p: Param, d_model: int, d_ff: int, act: str,
+                    dtype=jnp.bfloat16) -> dict:
+    prm = {
+        "w_in": dense_init(p.next(), (d_model, d_ff), dtype=dtype),
+        "w_out": dense_init(p.next(), (d_ff, d_model), dtype=dtype),
+    }
+    if act == "silu":                 # gated
+        prm["w_gate"] = dense_init(p.next(), (d_model, d_ff), dtype=dtype)
+    return prm
+
+
+def mlp(x: jax.Array, prm: dict, act: str = "silu") -> jax.Array:
+    h = x @ prm["w_in"]
+    if act == "silu":
+        h = jax.nn.silu(x @ prm["w_gate"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ prm["w_out"]

@@ -1,0 +1,155 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based capacity dispatch.
+
+Design notes (and why not a (T, E, C) one-hot dispatch tensor): at the
+assigned shapes a dense dispatch mask is ~10^12 elements.  Instead tokens
+are *sorted by expert id* (MegaBlocks-style), ranked within their expert
+run, and scattered into an (E, C, d) buffer — O(T·k) memory, batched expert
+GEMMs of shape (E, C, d) x (E, d, ff) that shard cleanly: E over the
+``data``/``expert`` axes (expert parallelism), ff over ``model`` (TP).
+
+FLOP accounting: only top-k experts run per token (capacity drops excess),
+so cost_analysis FLOPs track 6·N_active·D as the roofline expects.
+
+Arctic's ``dense_residual``: a small dense SwiGLU branch runs in parallel
+with the MoE and is summed (the "dense + MoE hybrid" of snowflake-arctic).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, MoEConfig
+from .layers import Param, dense_init
+from .mlp import init_mlp_params, mlp
+
+__all__ = ["init_moe_params", "moe_layer"]
+
+
+def _pick_ec_axes(E: int, capacity: int):
+    """(E axis, C axis) for dispatch-buffer sharding over 'data'."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or "data" not in (mesh.axis_names or ()):
+            return None, None
+        dpz = mesh.shape["data"]
+        if dpz > 1 and E % dpz == 0:
+            return "data", None
+        if dpz > 1 and capacity % dpz == 0:
+            return None, "data"
+    except Exception:
+        pass
+    return None, None
+
+
+def _constrain(x, *spec):
+    """Best-effort sharding constraint: applies only when the named axes
+    exist in the ambient mesh and divide the dims; no-op otherwise (CPU
+    tests, single device).  The MoE dispatch buffers are the largest
+    activations in the MoE train cells — without explicit constraints
+    GSPMD replicated them (mixtral train: 158 GiB/device observed)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
+        fixed = []
+        for dim, ax in zip(x.shape, spec):
+            if ax is None:
+                fixed.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            if not all(a in mesh.axis_names for a in axes):
+                fixed.append(None)
+                continue
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            fixed.append(ax if (size > 1 and dim % size == 0) else None)
+        if all(f is None for f in fixed):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(*fixed))
+    except Exception:
+        return x
+
+
+def init_moe_params(p: Param, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    mc = cfg.moe
+    d, ff = cfg.d_model, cfg.d_ff
+    prm = {
+        "router": dense_init(p.next(), (d, mc.n_experts), dtype=jnp.float32),
+        "w_in": dense_init(p.next(), (mc.n_experts, d, ff), in_axis=1,
+                           dtype=dtype),
+        "w_gate": dense_init(p.next(), (mc.n_experts, d, ff), in_axis=1,
+                             dtype=dtype),
+        "w_out": dense_init(p.next(), (mc.n_experts, ff, d), in_axis=1,
+                            dtype=dtype),
+    }
+    if mc.dense_residual:
+        prm["dense"] = init_mlp_params(p, d, mc.dense_d_ff or ff, "silu",
+                                       dtype=dtype)
+    return prm
+
+
+def moe_layer(x: jax.Array, prm: dict, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d)."""
+    mc: MoEConfig = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    k = mc.top_k
+    E = mc.n_experts
+    xt = x.reshape(T, d)
+
+    # -- routing (f32) ---------------------------------------------------------
+    logits = xt.astype(jnp.float32) @ prm["router"]          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)          # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # -- sort-based dispatch ----------------------------------------------------
+    Tk = T * k
+    flat_expert = expert_ids.reshape(Tk)
+    flat_token = jnp.repeat(jnp.arange(T), k)
+    flat_gate = gate_vals.reshape(Tk)
+
+    order = jnp.argsort(flat_expert)                         # stable
+    sorted_e = flat_expert[order]
+    idx = jnp.arange(Tk)
+    run_start = jnp.where(jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_e[1:] != sorted_e[:-1]]), idx, 0)
+    rank = idx - jax.lax.cummax(run_start, axis=0)           # pos within expert
+
+    # capacity: cf * fair share, floored so tiny-T (decode: T = batch)
+    # doesn't spuriously drop, capped at Tk (= provably drop-free)
+    capacity = min(Tk, max(4, int((Tk / E) * mc.capacity_factor)))
+    keep = rank < capacity
+    slot = jnp.where(keep, sorted_e * capacity + rank, E * capacity)  # drop bin
+
+    # scatter tokens into (E*C + 1, d); last row is the drop bin
+    src = _constrain(xt[flat_token[order]], ("data",), None)
+    buf = jnp.zeros((E * capacity + 1, d), x.dtype).at[slot].set(src)
+    h = buf[: E * capacity].reshape(E, capacity, d)
+
+    # -- batched expert SwiGLU ---------------------------------------------------
+    # shard E over data when divisible (expert parallel: arctic 128e),
+    # else shard capacity over data (mixtral 8e < 16 devices); ff over TP
+    e_ax, c_ax = _pick_ec_axes(E, capacity)
+    h = _constrain(h, e_ax, c_ax, None)
+    hin = _constrain(jnp.einsum("ecd,edf->ecf", h, prm["w_in"]),
+                     e_ax, c_ax, "model")
+    hgate = _constrain(
+        jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, prm["w_gate"])),
+        e_ax, c_ax, "model")
+    hout = jnp.einsum("ecf,efd->ecd", hin * hgate, prm["w_out"])
+    hout = _constrain(hout, e_ax, c_ax, None)
+
+    # -- combine ------------------------------------------------------------------
+    flat_out = hout.reshape(E * capacity, d)
+    gathered = jnp.where(keep[:, None], flat_out[jnp.clip(slot, 0, E * capacity - 1)],
+                         0.0)
+    weighted = gathered.astype(jnp.float32) * flat_gate[order][:, None]
+    out = jnp.zeros((T, d), jnp.float32).at[flat_token[order]].add(weighted)
+    out = out.astype(x.dtype).reshape(B, S, d)
+
+    if mc.dense_residual:
+        out = out + mlp(x, prm["dense"], "silu")
+    return out

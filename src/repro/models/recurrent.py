@@ -1,0 +1,109 @@
+"""RG-LRU temporal-mixing block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Structure: two width-``w`` branches from x — gate branch (GeLU) and signal
+branch (short causal conv1d -> RG-LRU) — multiplied and projected back.
+
+RG-LRU recurrence (diagonal linear, hence parallelizable):
+
+    r_t = sigmoid(W_a x_t)        a_t = exp(c * softplus(Λ) * (-r_t))
+    i_t = sigmoid(W_i x_t)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t^2) ⊙ (i_t ⊙ x_t)
+
+Training uses ``jax.lax.associative_scan`` over time (log-depth parallel
+scan — the TPU-native substitute for the paper family's CUDA linear-scan
+kernels); decode is the O(1) single-step update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Param, dense_init
+
+__all__ = ["init_rglru_params", "rglru_full", "rglru_decode",
+           "init_rglru_state"]
+
+_C = 8.0  # Griffin's gate sharpness constant
+
+
+def init_rglru_params(p: Param, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    return {
+        "w_x": dense_init(p.next(), (d, w), dtype=dtype),      # signal branch
+        "w_g": dense_init(p.next(), (d, w), dtype=dtype),      # gate branch
+        "w_out": dense_init(p.next(), (w, d), dtype=dtype),
+        "conv_w": dense_init(p.next(), (cfg.conv1d_width, w), dtype=dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": dense_init(p.next(), (w, w), dtype=dtype),      # recurrence gate
+        "w_i": dense_init(p.next(), (w, w), dtype=dtype),      # input gate
+        "lam": jnp.full((w,), 0.65, jnp.float32),              # Λ init
+    }
+
+
+def _gates(u: jax.Array, prm: dict):
+    """u: (..., w) f32 conv output -> (a, beta*u_gated) recurrence coeffs."""
+    r = jax.nn.sigmoid((u @ prm["w_a"].astype(u.dtype)))
+    i = jax.nn.sigmoid((u @ prm["w_i"].astype(u.dtype)))
+    log_a = -_C * jax.nn.softplus(prm["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    return a, beta * (i * u)
+
+
+def _causal_conv(x: jax.Array, prm: dict, state: jax.Array | None = None):
+    """Depthwise causal conv1d, width K.  x: (B, S, w).
+
+    ``state`` carries the trailing K-1 inputs for decode; returns
+    (out, new_state).
+    """
+    K = prm["conv_w"].shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)              # (B, S+K-1, w)
+    out = sum(xp[:, i:i + x.shape[1], :] * prm["conv_w"][i][None, None, :]
+              for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else pad
+    return out + prm["conv_b"], new_state
+
+
+def rglru_full(x: jax.Array, prm: dict, cfg: ModelConfig):
+    """Train/prefill pass. x: (B, S, d) -> (out, (h_last, conv_state))."""
+    gate = jax.nn.gelu(x @ prm["w_g"])
+    u, conv_state = _causal_conv(x @ prm["w_x"], prm)
+    a, b = _gates(u.astype(jnp.float32), prm)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h_last = h[:, -1, :]                                # f32, decode state
+    h = h.astype(x.dtype)
+    out = (h * gate) @ prm["w_out"]
+    return out, (h_last, conv_state)
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, n_layers: int,
+                     dtype=jnp.bfloat16) -> dict:
+    w = cfg.rglru_width or cfg.d_model
+    K = cfg.conv1d_width
+    return {
+        "h": jnp.zeros((n_layers, batch, w), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, K - 1, w), dtype),
+    }
+
+
+def rglru_decode(x: jax.Array, prm: dict, cfg: ModelConfig,
+                 h_prev: jax.Array, conv_state: jax.Array):
+    """One-token step. x: (B, 1, d) -> (out, h_new, conv_state_new)."""
+    gate = jax.nn.gelu(x @ prm["w_g"])
+    u, conv_state = _causal_conv(x @ prm["w_x"], prm, state=conv_state)
+    a, b = _gates(u.astype(jnp.float32), prm)           # (B, 1, w)
+    h = a[:, 0] * h_prev + b[:, 0]
+    out = (h[:, None, :].astype(x.dtype) * gate) @ prm["w_out"]
+    return out, h, conv_state

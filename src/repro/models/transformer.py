@@ -1,0 +1,367 @@
+"""Decoder-only LM assembly over a layer-kind pattern.
+
+Layers are applied as ``lax.scan`` over *pattern units* (config.py) so HLO
+size stays flat in depth; the pattern remainder is unrolled.  One codebase
+covers all assigned decoder families:
+
+  attn / attn_local   GQA attention (full / sliding-window)
+  cross_attn          cross-attention to stub image embeddings (VLM)
+  rglru               RecurrentGemma temporal mixing
+  mlstm / slstm       xLSTM blocks
+
+Three modes:
+  forward_train   tokens -> logits                     (no caches)
+  forward_prefill tokens -> logits_last + caches       (serve prefill)
+  forward_decode  1 token + caches -> logits + caches  (serve step)
+
+Caches/states are pytrees stacked per pattern position: attention KV
+(U, B, T, G, hd), recurrent states (U, B, ...); the decode scan threads
+them through the same unit loop.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import recurrent as R
+from . import xlstm as X
+from .config import ModelConfig
+from .layers import Param, dense_init, rms_norm
+from .mlp import init_mlp_params, mlp
+from .moe import init_moe_params, moe_layer
+
+__all__ = ["init_params", "forward_train", "forward_prefill",
+           "forward_decode", "init_decode_cache", "loss_fn"]
+
+ATTN_KINDS = ("attn", "attn_local", "cross_attn")
+
+
+def _has_mlp(cfg: ModelConfig, kind: str) -> bool:
+    return kind in ATTN_KINDS and (cfg.d_ff > 0 or cfg.moe is not None)
+
+
+def _mixes_tokens_with(cfg: ModelConfig, kind: str) -> int:
+    """Window for local kinds (0 = full)."""
+    return cfg.sliding_window if kind == "attn_local" else 0
+
+
+# ===========================================================================
+# parameter init
+# ===========================================================================
+
+def _init_layer(p: Param, cfg: ModelConfig, kind: str, dtype) -> dict:
+    d = cfg.d_model
+    prm = {"ln1": jnp.zeros((d,), jnp.float32)}
+    if kind in ("attn", "attn_local", "cross_attn"):
+        prm["attn"] = A.init_attn_params(p, cfg, dtype)
+    elif kind == "rglru":
+        prm["mix"] = R.init_rglru_params(p, cfg, dtype)
+    elif kind == "mlstm":
+        prm["mix"] = X.init_mlstm_params(p, cfg, dtype)
+    elif kind == "slstm":
+        prm["mix"] = X.init_slstm_params(p, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if _has_mlp(cfg, kind):
+        prm["ln2"] = jnp.zeros((d,), jnp.float32)
+        prm["mlp"] = (init_moe_params(p, cfg, dtype) if cfg.moe is not None
+                      else init_mlp_params(p, d, cfg.d_ff, cfg.act, dtype))
+    return prm
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> dict:
+    p = Param(key)
+    params = {
+        "embed": dense_init(p.next(), (cfg.vocab, cfg.d_model), in_axis=1,
+                            dtype=dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(
+            p.next(), (cfg.d_model, cfg.vocab), dtype=dtype)
+    units = []
+    for pos, kind in enumerate(cfg.pattern):
+        copies = [_init_layer(p, cfg, kind, dtype) for _ in range(cfg.n_units)]
+        units.append(jax.tree.map(lambda *xs: jnp.stack(xs), *copies))
+    params["units"] = units
+    params["rem"] = [
+        _init_layer(p, cfg, cfg.pattern[i], dtype)
+        for i in range(cfg.n_remainder)
+    ]
+    return params
+
+
+# ===========================================================================
+# single layer application
+# ===========================================================================
+
+def _apply_layer_full(cfg: ModelConfig, kind: str, x, prm, positions, aux,
+                      want_cache: bool, max_len: int):
+    """Full-sequence pass; returns (x, cache_entry or ())."""
+    h = rms_norm(x, prm["ln1"], cfg.norm_eps)
+    cache = ()
+    if kind in ("attn", "attn_local"):
+        W = _mixes_tokens_with(cfg, kind)
+        mix, (k, v) = A.attention_full(h, prm["attn"], cfg, positions,
+                                       window=W)
+        if want_cache:
+            S = k.shape[1]
+            Tc = min(max_len, W) if W else max_len
+            ck = jnp.zeros((x.shape[0], Tc, cfg.n_kv_heads, cfg.hd), k.dtype)
+            cv = jnp.zeros_like(ck)
+            if W and S > Tc:
+                # ring layout: logical position p -> slot p % W; keep last W
+                pos_tail = jnp.arange(S - Tc, S)
+                slots = jnp.mod(pos_tail, Tc)
+                ck = ck.at[:, slots].set(k[:, S - Tc:])
+                cv = cv.at[:, slots].set(v[:, S - Tc:])
+            else:
+                ck, cv = A.update_cache(ck, cv, k, v, 0)
+            cache = {"k": ck, "v": cv}
+    elif kind == "cross_attn":
+        mix, (k, v) = A.attention_cross(h, prm["attn"], cfg, kv_src=aux)
+        if want_cache:
+            cache = {"k": k, "v": v}
+    elif kind == "rglru":
+        mix, (hlast, conv) = R.rglru_full(h, prm["mix"], cfg)
+        if want_cache:
+            cache = {"h": hlast, "conv": conv}
+    elif kind == "mlstm":
+        mix, state = X.mlstm_full(h, prm["mix"], cfg, want_state=want_cache)
+        if want_cache:
+            cache = state
+    elif kind == "slstm":
+        mix, carry = X.slstm_full(h, prm["mix"], cfg)
+        if want_cache:
+            cache = {"h": carry[0], "c": carry[1], "n": carry[2],
+                     "m": carry[3]}
+    else:
+        raise ValueError(kind)
+    x = x + mix
+    if _has_mlp(cfg, kind):
+        h2 = rms_norm(x, prm["ln2"], cfg.norm_eps)
+        ff = (moe_layer(h2, prm["mlp"], cfg) if cfg.moe is not None
+              else mlp(h2, prm["mlp"], cfg.act))
+        x = x + ff
+    return x, cache
+
+
+def _apply_layer_decode(cfg: ModelConfig, kind: str, x, prm, pos, aux, cache):
+    h = rms_norm(x, prm["ln1"], cfg.norm_eps)
+    if kind in ("attn", "attn_local"):
+        if "codes_k" in cache:           # pwrel-compressed KV (serving/kvcache)
+            from ..serving import kvcache as KV
+            mix, cache = KV.compressed_attention_decode(
+                h, prm["attn"], cfg, cache, pos,
+                window=_mixes_tokens_with(cfg, kind))
+        else:
+            mix, ck, cv = A.attention_decode(
+                h, prm["attn"], cfg, cache["k"], cache["v"], pos,
+                window=_mixes_tokens_with(cfg, kind))
+            cache = {"k": ck, "v": cv}
+    elif kind == "cross_attn":
+        if "codes_k" in cache:
+            from ..serving import kvcache as KV
+            kv = (KV.dequantize_kv(KV._unpack(cache, "k")),
+                  KV.dequantize_kv(KV._unpack(cache, "v")))
+            mix, _ = A.attention_cross(h, prm["attn"], cfg, kv_cache=kv)
+        else:
+            mix, _ = A.attention_cross(h, prm["attn"], cfg,
+                                       kv_cache=(cache["k"], cache["v"]))
+    elif kind == "rglru":
+        mix, hn, conv = R.rglru_decode(h, prm["mix"], cfg, cache["h"],
+                                       cache["conv"])
+        cache = {"h": hn, "conv": conv}
+    elif kind == "mlstm":
+        mix, C, n, m = X.mlstm_decode(h, prm["mix"], cfg, cache["C"],
+                                      cache["n"], cache["m"])
+        cache = {"C": C, "n": n, "m": m}
+    elif kind == "slstm":
+        mix, carry = X.slstm_decode(h, prm["mix"], cfg,
+                                    (cache["h"], cache["c"], cache["n"],
+                                     cache["m"]))
+        cache = {"h": carry[0], "c": carry[1], "n": carry[2], "m": carry[3]}
+    else:
+        raise ValueError(kind)
+    x = x + mix
+    if _has_mlp(cfg, kind):
+        h2 = rms_norm(x, prm["ln2"], cfg.norm_eps)
+        ff = (moe_layer(h2, prm["mlp"], cfg) if cfg.moe is not None
+              else mlp(h2, prm["mlp"], cfg.act))
+        x = x + ff
+    return x, cache
+
+
+# ===========================================================================
+# trunk traversal (scan over units + unrolled remainder)
+# ===========================================================================
+
+def _trunk_full(cfg: ModelConfig, params, x, positions, aux,
+                want_cache: bool, max_len: int):
+    def unit_body(x, unit_params):
+        caches = []
+        for pos_i, kind in enumerate(cfg.pattern):
+            x, c = _apply_layer_full(cfg, kind, x, unit_params[pos_i],
+                                     positions, aux, want_cache, max_len)
+            caches.append(c)
+        return x, tuple(caches)
+
+    body = (jax.checkpoint(unit_body) if (cfg.remat and not want_cache)
+            else unit_body)
+    if cfg.n_units > 0 and cfg.scan_layers:
+        x, unit_caches = jax.lax.scan(body, x, tuple(params["units"]))
+    elif cfg.n_units > 0:
+        # unrolled path (dry-run roofline): same params layout, static slices
+        per_unit = []
+        for u in range(cfg.n_units):
+            unit_params = jax.tree.map(lambda t: t[u], tuple(params["units"]))
+            x, caches_u = body(x, unit_params)
+            per_unit.append(caches_u)
+        unit_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_unit)
+    else:
+        unit_caches = tuple(() for _ in cfg.pattern)
+    rem_caches = []
+    for i, prm in enumerate(params["rem"]):
+        kind = cfg.pattern[i]
+        x, c = _apply_layer_full(cfg, kind, x, prm, positions, aux,
+                                 want_cache, max_len)
+        rem_caches.append(c)
+    return x, {"units": unit_caches, "rem": tuple(rem_caches)}
+
+
+def _trunk_decode(cfg: ModelConfig, params, x, pos, aux, cache):
+    def unit_body(x, scan_in):
+        unit_params, unit_cache = scan_in
+        new_caches = []
+        for pos_i, kind in enumerate(cfg.pattern):
+            x, c = _apply_layer_decode(cfg, kind, x, unit_params[pos_i], pos,
+                                       aux, unit_cache[pos_i])
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    if cfg.n_units > 0 and cfg.scan_layers:
+        x, unit_caches = jax.lax.scan(
+            unit_body, x, (tuple(params["units"]), cache["units"]))
+    elif cfg.n_units > 0:
+        per_unit = []
+        for u in range(cfg.n_units):
+            sl = jax.tree.map(lambda t: t[u],
+                              (tuple(params["units"]), cache["units"]))
+            x, caches_u = unit_body(x, sl)
+            per_unit.append(caches_u)
+        unit_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_unit)
+    else:
+        unit_caches = cache["units"]
+    rem_caches = []
+    for i, prm in enumerate(params["rem"]):
+        kind = cfg.pattern[i]
+        x, c = _apply_layer_decode(cfg, kind, x, prm, pos, aux,
+                                   cache["rem"][i])
+        rem_caches.append(c)
+    return x, {"units": unit_caches, "rem": tuple(rem_caches)}
+
+
+# ===========================================================================
+# public entry points
+# ===========================================================================
+
+def _embed(cfg: ModelConfig, params, tokens):
+    x = params["embed"][tokens]
+    return x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+
+def _logits(cfg: ModelConfig, params, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (x @ w).astype(jnp.float32)
+    if cfg.logits_softcap:
+        c = cfg.logits_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def forward_train(cfg: ModelConfig, params, tokens, aux=None):
+    """tokens (B, S) -> logits (B, S, V) f32."""
+    S = tokens.shape[1]
+    positions = jnp.arange(S)
+    x = _embed(cfg, params, tokens)
+    x, _ = _trunk_full(cfg, params, x, positions, aux, False, S)
+    return _logits(cfg, params, x)
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, aux=None):
+    """Next-token cross-entropy (mean over B*(S-1) targets)."""
+    logits = forward_train(cfg, params, tokens, aux)
+    tgt = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def forward_prefill(cfg: ModelConfig, params, tokens, aux=None,
+                    max_len: int | None = None):
+    """tokens (B, S) -> (last-position logits (B, V), decode cache)."""
+    S = tokens.shape[1]
+    max_len = max_len or S
+    positions = jnp.arange(S)
+    x = _embed(cfg, params, tokens)
+    x, cache = _trunk_full(cfg, params, x, positions, aux, True, max_len)
+    return _logits(cfg, params, x[:, -1:, :])[:, 0, :], cache
+
+
+def forward_decode(cfg: ModelConfig, params, token, cache, pos, aux=None,
+                   kv_codec: bool = False):
+    """token (B, 1) + cache -> (logits (B, V), new cache).
+
+    ``kv_codec`` is informational — the compressed path triggers off the
+    cache's own leaves (``codes_k`` present => pwrel-compressed KV).
+    """
+    del kv_codec
+    x = _embed(cfg, params, token)
+    x, cache = _trunk_decode(cfg, params, x, pos, aux, cache)
+    return _logits(cfg, params, x)[:, 0, :], cache
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16, n_image_tokens: int | None = None):
+    """Abstract-shaped cache matching _trunk_decode's expectations."""
+    n_img = n_image_tokens or cfg.n_image_tokens
+
+    def entry(kind: str, L: int):
+        if L == 0:
+            return None
+        if kind in ("attn", "attn_local"):
+            Tc = max_len
+            if kind == "attn_local" and cfg.sliding_window:
+                Tc = min(max_len, cfg.sliding_window)   # ring buffer
+            shape = (L, batch, Tc, cfg.n_kv_heads, cfg.hd)
+            return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        if kind == "cross_attn":
+            shape = (L, batch, n_img, cfg.n_kv_heads, cfg.hd)
+            return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        if kind == "rglru":
+            w = cfg.rglru_width or cfg.d_model
+            return {"h": jnp.zeros((L, batch, w), jnp.float32),
+                    "conv": jnp.zeros((L, batch, cfg.conv1d_width - 1, w),
+                                      dtype)}
+        if kind == "mlstm":
+            H, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+            return {"C": jnp.zeros((L, batch, H, hd, hd), jnp.float32),
+                    "n": jnp.zeros((L, batch, H, hd), jnp.float32),
+                    "m": jnp.zeros((L, batch, H), jnp.float32)}
+        if kind == "slstm":
+            z = jnp.zeros((L, batch, cfg.d_model), jnp.float32)
+            return {"h": z, "c": z, "n": z, "m": z}
+        raise ValueError(kind)
+
+    units = tuple(
+        (entry(kind, cfg.n_units) or ()) for kind in cfg.pattern
+    )
+    rem = tuple(
+        jax.tree.map(lambda x: x[0], entry(cfg.pattern[i], 1)) or ()
+        for i in range(cfg.n_remainder)
+    )
+    return {"units": units, "rem": rem}

@@ -1,0 +1,216 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM (scalar).
+
+mLSTM — exponential-gated matrix-memory LSTM.  Training/prefill uses the
+paper's *parallel (quadratic) form* — a gated-attention-like S x S kernel
+with log-domain max stabilization; decode uses the O(1) recurrent form
+
+    C_t = f_t C_{t-1} + i_t v_t k_t^T        (per head, C: hd x hd)
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = o_t ⊙ (C_t q_t) / max(|n_t·q_t|, exp(-m_t))
+
+sLSTM — scalar-memory LSTM with exponential gating and a true nonlinear
+recurrence (h feeds back into the gates), so training runs a ``lax.scan``
+over time (no parallel form exists; this is the sequential member of the
+block pattern and is why the assigned xlstm config is small).
+
+Both are wrapped in the paper's block structure: pre-norm, up-projection
+with a SiLU gate branch, mixer, down-projection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Param, dense_init
+
+__all__ = [
+    "init_mlstm_params", "mlstm_full", "mlstm_decode", "init_mlstm_state",
+    "init_slstm_params", "slstm_full", "slstm_decode", "init_slstm_state",
+]
+
+NEG_INF = -2.0 ** 30
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+def init_mlstm_params(p: Param, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    H, hd = cfg.n_heads, d // cfg.n_heads
+    return {
+        "w_up": dense_init(p.next(), (d, 2 * d), dtype=dtype),   # mixer+gate
+        "w_q": dense_init(p.next(), (d, H * hd), dtype=dtype),
+        "w_k": dense_init(p.next(), (d, H * hd), dtype=dtype),
+        "w_v": dense_init(p.next(), (d, H * hd), dtype=dtype),
+        "w_if": dense_init(p.next(), (d, 2 * H), dtype=jnp.float32),
+        "w_down": dense_init(p.next(), (d, d), dtype=dtype),
+    }
+
+
+def _mlstm_qkv(z: jax.Array, prm: dict, H: int):
+    B, S, d = z.shape
+    hd = d // H
+    q = (z @ prm["w_q"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = (z @ prm["w_k"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    v = (z @ prm["w_v"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    gates = z.astype(jnp.float32) @ prm["w_if"]          # (B, S, 2H)
+    i_raw = gates[..., :H].transpose(0, 2, 1)            # (B, H, S)
+    f_raw = gates[..., H:].transpose(0, 2, 1)
+    return q, k, v, i_raw, f_raw
+
+
+def mlstm_full(x: jax.Array, prm: dict, cfg: ModelConfig,
+               want_state: bool = False):
+    """Parallel form. x: (B, S, d) -> (out, final_state | None).
+
+    The final recurrent state is reconstructed exactly from the parallel
+    quantities (telescoping the recurrence):
+        m_S  = max_j (F_S - F_j + i~_j)
+        w_j  = exp(F_S - F_j + i~_j - m_S)
+        C_S  = sum_j w_j v_j (k_j/sqrt(hd))^T,   n_S = sum_j w_j k_j/sqrt(hd)
+    so serve-prefill can hand decode an O(1) state.
+    """
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    up = x @ prm["w_up"]
+    z, gate = up[..., :d], jax.nn.silu(up[..., d:])
+    q, k, v, i_raw, f_raw = _mlstm_qkv(z, prm, H)
+
+    logf = jax.nn.log_sigmoid(f_raw)                     # (B, H, S)
+    F = jnp.cumsum(logf, axis=-1)                        # sum_{<=t} log f
+    # D~_ij = F_i - F_j + i~_j   (j <= i)
+    Dt = F[..., :, None] - F[..., None, :] + i_raw[..., None, :]
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    Dt = jnp.where(causal[None, None], Dt, NEG_INF)
+    m = jnp.max(Dt, axis=-1, keepdims=True)              # (B, H, S, 1)
+    Dmat = jnp.exp(Dt - m)
+
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k,
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    Smat = scores * Dmat
+    nrm = jnp.maximum(jnp.abs(jnp.sum(Smat, axis=-1, keepdims=True)),
+                      jnp.exp(-m))
+    h = jnp.einsum("bhst,bhtd->bhsd", (Smat / nrm).astype(v.dtype), v)
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, d)
+    out = (h * gate) @ prm["w_down"]
+
+    state = None
+    if want_state:
+        w_log = F[..., -1:] - F + i_raw                  # (B, H, S)
+        m_S = jnp.max(w_log, axis=-1)                    # (B, H)
+        w = jnp.exp(w_log - m_S[..., None])
+        kf = k.astype(jnp.float32) * (hd ** -0.5)
+        vf = v.astype(jnp.float32)
+        C_S = jnp.einsum("bhs,bhsd,bhse->bhde", w, vf, kf)
+        n_S = jnp.einsum("bhs,bhsd->bhd", w, kf)
+        state = {"C": C_S, "n": n_S, "m": m_S}
+    return out, state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, n_layers: int) -> dict:
+    d = cfg.d_model
+    H, hd = cfg.n_heads, d // cfg.n_heads
+    return {
+        "C": jnp.zeros((n_layers, batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((n_layers, batch, H, hd), jnp.float32),
+        "m": jnp.zeros((n_layers, batch, H), jnp.float32),
+    }
+
+
+def mlstm_decode(x: jax.Array, prm: dict, cfg: ModelConfig,
+                 C: jax.Array, n: jax.Array, m: jax.Array):
+    """Recurrent step. x: (B, 1, d); C: (B,H,hd,hd); n: (B,H,hd); m: (B,H)."""
+    B, _, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    up = x @ prm["w_up"]
+    z, gate = up[..., :d], jax.nn.silu(up[..., d:])
+    q, k, v, i_raw, f_raw = _mlstm_qkv(z, prm, H)
+    q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]         # (B, H, hd)
+    i_raw, f_raw = i_raw[..., 0], f_raw[..., 0]          # (B, H)
+
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + m, i_raw)
+    f_eff = jnp.exp(logf + m - m_new)[..., None]
+    i_eff = jnp.exp(i_raw - m_new)[..., None]
+
+    kf = k.astype(jnp.float32) * (hd ** -0.5)
+    C_new = f_eff[..., None] * C + (i_eff[..., None]
+                                    * v.astype(jnp.float32)[..., :, None]
+                                    * kf[..., None, :])
+    n_new = f_eff * n + i_eff * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhde,bhe->bhd", C_new, qf)
+    den = jnp.maximum(jnp.abs(jnp.sum(n_new * qf, axis=-1, keepdims=True)),
+                      jnp.exp(-m_new)[..., None])
+    h = (num / den).reshape(B, 1, d).astype(x.dtype)
+    out = (h * gate) @ prm["w_down"]
+    return out, C_new, n_new, m_new
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+def init_slstm_params(p: Param, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    return {
+        "w_gates": dense_init(p.next(), (d, 4 * d), dtype=dtype),   # i f z o
+        "r_gates": dense_init(p.next(), (d, 4 * d), dtype=dtype),   # recurrent
+        "b_gates": jnp.zeros((4 * d,), jnp.float32),
+        "w_up": dense_init(p.next(), (d, 2 * d), dtype=dtype),      # post-FFN
+        "w_down": dense_init(p.next(), (d, d), dtype=dtype),
+    }
+
+
+def _slstm_step(prm, carry, wx_t):
+    """carry: (h, c, n, m) each (B, d) f32; wx_t: (B, 4d) f32."""
+    h, c, n, m = carry
+    raw = wx_t + h @ prm["r_gates"].astype(jnp.float32) + prm["b_gates"]
+    d = h.shape[-1]
+    i_raw, f_raw, z_raw, o_raw = jnp.split(raw, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + m, i_raw)
+    i = jnp.exp(i_raw - m_new)
+    f = jnp.exp(logf + m - m_new)
+    c_new = f * c + i * jnp.tanh(z_raw)
+    n_new = f * n + i
+    h_new = jax.nn.sigmoid(o_raw) * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_full(x: jax.Array, prm: dict, cfg: ModelConfig):
+    """Sequential scan over time. x: (B, S, d) -> (out, final carry)."""
+    B, S, d = x.shape
+    wx = (x @ prm["w_gates"]).astype(jnp.float32)        # (B, S, 4d)
+    carry0 = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(4))
+
+    def step(carry, wx_t):
+        new = _slstm_step(prm, carry, wx_t)
+        return new, new[0]
+
+    carry, hs = jax.lax.scan(step, carry0, wx.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)            # (B, S, d)
+    up = h @ prm["w_up"]
+    out = (up[..., :d] * jax.nn.silu(up[..., d:])) @ prm["w_down"]
+    return out, carry
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, n_layers: int) -> dict:
+    d = cfg.d_model
+    z = jnp.zeros((n_layers, batch, d), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": z}
+
+
+def slstm_decode(x: jax.Array, prm: dict, cfg: ModelConfig, carry):
+    """One-token step; carry: (h, c, n, m) each (B, d)."""
+    d = x.shape[-1]
+    wx = (x[:, 0] @ prm["w_gates"]).astype(jnp.float32)
+    carry = _slstm_step(prm, carry, wx)
+    h = carry[0][:, None, :].astype(x.dtype)
+    up = h @ prm["w_up"]
+    out = (up[..., :d] * jax.nn.silu(up[..., d:])) @ prm["w_down"]
+    return out, carry

@@ -1,0 +1,129 @@
+"""Optimizers: AdamW (dtype-configurable moments) and factored Adafactor.
+
+Written against plain pytrees (no optax dependency in this container).
+``moment_dtype="bfloat16"`` halves optimizer memory — required to fit
+arctic-480b on a single 256-chip pod (see configs/arctic_480b.py).
+Adafactor drops the second moment to row+col factors — the fallback if
+even bf16 moments don't fit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "Adafactor", "make_optimizer"]
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    moment_dtype: str = "float32"
+
+    def init(self, params):
+        dt = jnp.dtype(self.moment_dtype)
+        zeros = lambda p: jnp.zeros_like(p, dtype=dt)  # noqa: E731
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+        dt = jnp.dtype(self.moment_dtype)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            mhat = m32 / c1
+            vhat = v32 / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - self.lr * delta
+            return newp.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+@dataclass(frozen=True)
+class Adafactor:
+    """Factored second moment (row/col means) — O(rows+cols) state for
+    matrices, full vector state otherwise.  First moment omitted."""
+    lr: float = 3e-4
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+
+    def init(self, params):
+        def factors(p):
+            if p.ndim >= 2:
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                       jnp.float32)}
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+        return {"f": jax.tree.map(factors, params,
+                                  is_leaf=lambda x: isinstance(x, jax.Array)
+                                  or hasattr(x, "shape")),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-self.decay)
+
+        def upd(p, g, f):
+            g = g.astype(jnp.float32)
+            g2 = g * g + self.eps
+            if p.ndim >= 2:
+                r = beta * f["r"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                c = beta * f["c"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = (r[..., None] * c[..., None, :]
+                         / jnp.maximum(jnp.mean(r, axis=-1,
+                                                keepdims=True)[..., None],
+                                       self.eps))
+                u = g * jax.lax.rsqrt(jnp.maximum(denom, self.eps))
+                nf = {"r": r, "c": c}
+            else:
+                v = beta * f["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, self.eps))
+                nf = {"v": v}
+            norm = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, norm / self.clip_threshold)
+            newp = (p.astype(jnp.float32) - self.lr * u).astype(p.dtype)
+            return newp, nf
+
+        leaves_p, treedef = jax.tree.flatten(params)
+        leaves_g = treedef.flatten_up_to(grads)
+        leaves_f = treedef.flatten_up_to(state["f"])
+        outs = [upd(p, g, f) for p, g, f in zip(leaves_p, leaves_g, leaves_f)]
+        new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        new_f = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        return new_params, {"f": new_f, "step": step}
+
+
+def make_optimizer(kind: str, lr: float, moment_dtype: str = "float32",
+                   weight_decay: float = 0.0):
+    if kind == "adamw":
+        return AdamW(lr=lr, moment_dtype=moment_dtype,
+                     weight_decay=weight_decay)
+    if kind == "adafactor":
+        return Adafactor(lr=lr)
+    raise ValueError(kind)

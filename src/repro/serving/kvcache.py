@@ -1,0 +1,162 @@
+"""Compressed KV cache — the paper's technique as a first-class LM feature.
+
+BMQSIM's §4.3 scheme (sign bitmap + log2 transform + bounded quantization)
+applied to decode KV caches: K/V live in HBM as uint8 log-codes + packed
+sign bits + a per-(token, kv-head) scale, 2.11x smaller than bf16.  Decode
+attention reads ~the whole cache every step, so its roofline is the memory
+term — compressing the cache moves that term directly (see EXPERIMENTS.md
+§Perf).
+
+Layout per KV tensor (..., T, G, hd):
+    codes  uint8 (..., T, G, hd)      0 = exact-zero escape
+    signs  uint8 (..., T, G, hd/8)    paper's bitmap, packed 8/byte
+    scale  f32   (..., T, G, 1)       per-(token, head) log2 max
+
+Quantization step: 16 log2 units over 254 codes -> point-wise relative
+error <= 2^(8/254) - 1 ~= 2.2% — far below attention's own bf16 noise
+floor, verified by tests/test_serving.py against raw-cache decode.
+
+Each cache entry is quantized ONCE when written (the paper's per-stage,
+not per-gate, lesson: no accumulating requantization).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models import attention as A
+from ..models import transformer as T
+from ..models.config import ModelConfig
+from ..models.layers import rope, rope_cos_sin
+
+__all__ = ["quantize_kv", "dequantize_kv", "compress_prefill_cache",
+           "compressed_attention_decode", "make_compressed_decode_step",
+           "kv_bytes_ratio"]
+
+_RANGE = 16.0                 # log2 units of dynamic range below the max
+_STEP = _RANGE / 254.0
+_CODE_MAX = 255
+
+
+def kv_bytes_ratio(hd: int) -> float:
+    """bf16 bytes / compressed bytes per element."""
+    return 2.0 / (1.0 + 1.0 / 8.0 + 4.0 / hd)
+
+
+def quantize_kv(x: jax.Array) -> dict:
+    """x: (..., T, G, hd) -> codes/signs/scale dict (see module doc)."""
+    xf = x.astype(jnp.float32)
+    absx = jnp.abs(xf)
+    scale = jnp.max(jnp.log2(jnp.maximum(absx, 1e-30)), axis=-1,
+                    keepdims=True)                       # (..., T, G, 1)
+    L = jnp.log2(jnp.maximum(absx, 1e-30))
+    d = jnp.round((scale - L) / _STEP)
+    codes = jnp.clip(jnp.float32(_CODE_MAX) - d, 0.0, float(_CODE_MAX))
+    codes = jnp.where(absx == 0.0, 0.0, codes).astype(jnp.uint8)
+    signs = (xf < 0).astype(jnp.uint8)
+    sh = signs.shape
+    signs = signs.reshape(*sh[:-1], sh[-1] // 8, 8)
+    weights = (2 ** jnp.arange(8, dtype=jnp.uint8))
+    signs = jnp.sum(signs * weights, axis=-1).astype(jnp.uint8)
+    return {"codes": codes, "signs": signs, "scale": scale}
+
+
+def dequantize_kv(q: dict, dtype=jnp.bfloat16) -> jax.Array:
+    codes = q["codes"]
+    d = jnp.float32(_CODE_MAX) - codes.astype(jnp.float32)
+    mag = jnp.exp2(q["scale"] - d * _STEP)
+    mag = jnp.where(codes == 0, 0.0, mag)
+    sh = codes.shape
+    sbytes = q["signs"][..., None]                        # (..., hd/8, 1)
+    bits = (sbytes >> jnp.arange(8, dtype=jnp.uint8)) & 1
+    signs = bits.reshape(*sh[:-1], sh[-1]) == 1
+    return jnp.where(signs, -mag, mag).astype(dtype)
+
+
+def compress_prefill_cache(cache) -> dict:
+    """Quantize every attention k/v leaf of a prefill-produced cache."""
+    def conv(entry):
+        if isinstance(entry, dict) and "k" in entry:
+            out = dict(entry)
+            for key in ("k", "v"):
+                q = quantize_kv(entry[key])
+                out[f"codes_{key}"] = q["codes"]
+                out[f"signs_{key}"] = q["signs"]
+                out[f"scale_{key}"] = q["scale"]
+                del out[key]
+            return out
+        return entry
+
+    def walk(node):
+        if isinstance(node, dict) and ("k" in node):
+            return conv(node)
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(cache)
+
+
+def _unpack(qc: dict, key: str) -> dict:
+    return {"codes": qc[f"codes_{key}"], "signs": qc[f"signs_{key}"],
+            "scale": qc[f"scale_{key}"]}
+
+
+def _update_q(qc: dict, key: str, new: dict, pos) -> dict:
+    out = dict(qc)
+    for f in ("codes", "signs", "scale"):
+        tgt = qc[f"{f}_{key}"]
+        idx = (0, pos) + (0,) * (tgt.ndim - 2)
+        out[f"{f}_{key}"] = jax.lax.dynamic_update_slice(tgt, new[f], idx)
+    return out
+
+
+def compressed_attention_decode(x, prm, cfg: ModelConfig, qcache: dict,
+                                pos, *, window: int = 0):
+    """attention_decode against a quantized cache; quantizes the new entry
+    once and reads the cache through dequantization."""
+    B = x.shape[0]
+    Tlen = qcache["codes_k"].shape[1]
+    ring = bool(window) and Tlen == window
+    q, k, v = A._project_qkv(x, prm, cfg)
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    cos, sin = rope_cos_sin(posv, cfg.hd, cfg.rope_theta)
+    q = rope(q, cos, sin)
+    k = rope(k, cos, sin)
+
+    slot = jnp.mod(pos, Tlen) if ring else pos
+    qcache = _update_q(qcache, "k", quantize_kv(k), slot)
+    qcache = _update_q(qcache, "v", quantize_kv(v), slot)
+    cache_k = dequantize_kv(_unpack(qcache, "k"))
+    cache_v = dequantize_kv(_unpack(qcache, "v"))
+
+    scores = A._gqa_scores(q, cache_k, cfg)
+    j = jnp.arange(Tlen)
+    if ring:
+        mask = (j <= pos) | (pos >= Tlen)
+    else:
+        mask = j <= pos
+        if window:
+            mask = mask & (pos - j < window)
+    scores = jnp.where(mask[None, None, None, None, :], scores, A.NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = A._gqa_out(probs, cache_v, cfg) @ prm["wo"]
+    return out, qcache
+
+
+def make_compressed_decode_step(cfg: ModelConfig):
+    """Decode step whose cache leaves are quantized (attn kinds only;
+    recurrent states are O(1) and stay raw — DESIGN.md §Arch-applicability)."""
+    def decode(params, batch):
+        return T.forward_decode(cfg, params, batch["token"], batch["cache"],
+                                batch["pos"], batch.get("aux"),
+                                kv_codec=True)
+    return decode
+
+
+def init_compressed_cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    """Abstract quantized-cache pytree for the dry-run."""
+    raw = jax.eval_shape(lambda: T.init_decode_cache(cfg, batch, max_len))
+    return jax.eval_shape(compress_prefill_cache, raw)

@@ -1,0 +1,37 @@
+"""Serve-step factories: prefill (full prompt -> cache) and decode (1 tok).
+
+These are the programs the ``decode_*``/``long_*``/``prefill_*`` dry-run
+cells lower (NOT train_step, per the assignment).
+"""
+from __future__ import annotations
+
+from ..models import encdec as E
+from ..models import transformer as T
+from ..models.config import ModelConfig
+
+__all__ = ["make_prefill_step", "make_decode_step"]
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int | None = None):
+    if cfg.family == "audio":
+        def prefill(params, batch):
+            return E.encdec_prefill(cfg, params, batch["frames"],
+                                    batch["tokens"], max_len=max_len)
+    else:
+        def prefill(params, batch):
+            return T.forward_prefill(cfg, params, batch["tokens"],
+                                     batch.get("aux"), max_len=max_len)
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    if cfg.family == "audio":
+        def decode(params, batch):
+            return E.encdec_decode(cfg, params, batch["token"],
+                                   batch["cache"], batch["pos"])
+    else:
+        def decode(params, batch):
+            return T.forward_decode(cfg, params, batch["token"],
+                                    batch["cache"], batch["pos"],
+                                    batch.get("aux"))
+    return decode

@@ -1,0 +1,139 @@
+"""Checkpoint manager: atomic, resumable, elastic-reshardable.
+
+Fault-tolerance contract (assignment: "checkpoint/restart, handle node
+failures"):
+
+* ``save`` writes every leaf as a raw ``.npy`` under ``step_XXXX.tmp`` and
+  atomically renames to ``step_XXXX`` — a crash mid-save never corrupts
+  the latest checkpoint.
+* ``restore`` loads the newest complete step; leaves are ``device_put``
+  against the CURRENT mesh's shardings, so a checkpoint written on one
+  topology restores onto another (elastic re-shard: 8 hosts -> 4 hosts ->
+  512 chips are all the same bytes).
+* optional pwrel+zlib compression of leaves (the paper's two-level-store
+  idea applied to checkpoint bytes; lossless for exact restart).
+* ``keep_last`` garbage-collects old steps.
+
+The leaf<->file mapping is the pytree path (stable across runs because
+params are plain dicts/lists of fixed layout).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import zlib
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_last: int = 3,
+                 compress: bool = False):
+        self.dir = directory
+        self.keep_last = keep_last
+        self.compress = compress
+        os.makedirs(directory, exist_ok=True)
+
+    # -- paths -----------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # -- save --------------------------------------------------------------------
+    def save(self, step: int, tree) -> None:
+        leaves, _ = _flatten(tree)
+        tmp = self._step_dir(step) + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {}
+        for key, leaf in leaves.items():
+            arr = np.asarray(jax.device_get(leaf))
+            fn = key.replace("/", "__") + ".bin"
+            path = os.path.join(tmp, fn)
+            # raw-bytes container (np.save chokes on ml_dtypes like bf16)
+            blob = arr.tobytes()
+            codec = "raw"
+            if self.compress:
+                blob = zlib.compress(blob, 1)
+                codec = "zlib"
+            with open(path, "wb") as f:
+                f.write(blob)
+            manifest[key] = {"file": fn, "dtype": str(arr.dtype),
+                             "shape": list(arr.shape), "codec": codec}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        final = self._step_dir(step)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)            # atomic commit
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[: -self.keep_last]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # -- restore -------------------------------------------------------------------
+    def restore(self, template, step: int | None = None, shardings=None):
+        """Load into the structure of ``template``; ``shardings`` (same
+        pytree) re-shards each leaf onto the current mesh."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+
+        leaves, treedef = _flatten(template)
+        shard_leaves = None
+        if shardings is not None:
+            shard_leaves, _ = _flatten(shardings)
+        import ml_dtypes
+
+        def _dtype(name: str):
+            try:
+                return np.dtype(name)
+            except TypeError:
+                return np.dtype(getattr(ml_dtypes, name))
+
+        out = {}
+        for key in leaves:
+            ent = manifest[key]
+            path = os.path.join(d, ent["file"])
+            with open(path, "rb") as f:
+                blob = f.read()
+            if ent["codec"] == "zlib":
+                blob = zlib.decompress(blob)
+            arr = np.frombuffer(blob, dtype=_dtype(ent["dtype"])) \
+                .reshape(ent["shape"])
+            if shard_leaves is not None:
+                out[key] = jax.device_put(arr, shard_leaves[key])
+            else:
+                out[key] = jax.numpy.asarray(arr)
+        ordered = [out[k] for k in leaves]
+        return jax.tree_util.tree_unflatten(treedef, ordered), step

@@ -1,0 +1,102 @@
+"""Fault-tolerant training runtime.
+
+What "runs on 1000+ nodes" means here and how each piece maps:
+
+* **checkpoint/restart** — ``TrainRuntime.run`` checkpoints every
+  ``ckpt_every`` steps through the atomic CheckpointManager and, on ANY
+  exception from the step function, restores the latest checkpoint and
+  replays (the data pipeline is stateless-resumable, so the stream is
+  bit-identical).  ``max_restarts`` bounds flapping.
+* **elastic scaling** — restore re-device_puts against the *current*
+  mesh's shardings: a job preempted on N hosts resumes on M hosts
+  unchanged (exercised by tests/test_checkpoint.py).
+* **straggler mitigation** — step-time watchdog: steps slower than
+  ``straggler_factor`` x the trailing median are counted and surfaced in
+  metrics; on real fleets this signal feeds the scheduler's hot-spare
+  swap. (A single-process container can observe, not migrate.)
+* **failure injection** — ``fail_at_step`` deterministically raises inside
+  the loop to exercise the restart path in tests.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from dataclasses import dataclass, field
+
+import jax
+
+from .checkpoint import CheckpointManager
+
+__all__ = ["TrainRuntime", "RuntimeConfig"]
+
+
+@dataclass
+class RuntimeConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep_last: int = 3
+    max_restarts: int = 3
+    straggler_factor: float = 2.0
+    fail_at_step: int | None = None     # test hook: raise once at this step
+
+
+@dataclass
+class TrainRuntime:
+    cfg: RuntimeConfig
+    train_step: object                   # jitted (params, state, batch) -> ...
+    data_source: object                  # .batch(step) -> np array
+    shardings: object = None             # pytree for elastic restore
+
+    _failed_once: bool = field(default=False, init=False)
+
+    def run(self, params, state, n_steps: int, batch_to_device=None):
+        mgr = CheckpointManager(self.cfg.ckpt_dir, keep_last=self.cfg.keep_last)
+        restarts = 0
+        step = 0
+        # resume if a checkpoint exists
+        if mgr.latest_step() is not None:
+            (params, state), step = mgr.restore((params, state),
+                                                shardings=self.shardings)
+            step += 1
+        metrics_hist = []
+        step_times: list[float] = []
+        stragglers = 0
+        while step < n_steps:
+            try:
+                t0 = time.perf_counter()
+                if (self.cfg.fail_at_step == step and not self._failed_once):
+                    self._failed_once = True
+                    raise RuntimeError(f"injected node failure @step {step}")
+                batch = {"tokens": self.data_source.batch(step)}
+                if batch_to_device is not None:
+                    batch = batch_to_device(batch)
+                params, state, metrics = self.train_step(params, state, batch)
+                metrics = jax.tree.map(float, metrics)
+                dt = time.perf_counter() - t0
+                if len(step_times) >= 5:
+                    med = statistics.median(step_times[-20:])
+                    if dt > self.cfg.straggler_factor * med:
+                        stragglers += 1
+                step_times.append(dt)
+                metrics.update(step=step, step_time=dt,
+                               stragglers=stragglers, restarts=restarts)
+                metrics_hist.append(metrics)
+                if step % self.cfg.ckpt_every == 0 or step == n_steps - 1:
+                    mgr.save(step, (params, state))
+                step += 1
+            except (KeyboardInterrupt,):
+                raise
+            except Exception as exc:  # noqa: BLE001 — restart path
+                restarts += 1
+                if restarts > self.cfg.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded max_restarts={self.cfg.max_restarts}"
+                    ) from exc
+                if mgr.latest_step() is None:
+                    # nothing saved yet: restart from the initial state
+                    step = 0
+                    continue
+                (params, state), last = mgr.restore((params, state),
+                                                    shardings=self.shardings)
+                step = last + 1
+        return params, state, metrics_hist

@@ -1,0 +1,58 @@
+"""Train-step factory: loss -> grads -> (optional grad compression) -> update.
+
+One factory covers all families; the batch dict keys select the path:
+  decoder LMs   {"tokens"}           (+ "aux" image embeddings for VLM)
+  enc-dec       {"frames", "tokens"}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models import encdec as E
+from ..models import transformer as T
+from ..models.config import ModelConfig
+from ..optim.grad_compress import GradCompressor
+
+__all__ = ["make_loss_fn", "make_train_step", "init_train_state"]
+
+
+def make_loss_fn(cfg: ModelConfig):
+    if cfg.family == "audio":
+        def loss(params, batch):
+            return E.loss_fn_encdec(cfg, params, batch["frames"],
+                                    batch["tokens"])
+    else:
+        def loss(params, batch):
+            return T.loss_fn(cfg, params, batch["tokens"],
+                             batch.get("aux"))
+    return loss
+
+
+def init_train_state(cfg: ModelConfig, params, optimizer,
+                     grad_compressor: GradCompressor | None = None):
+    state = {"opt": optimizer.init(params)}
+    if grad_compressor is not None:
+        state["gc_err"] = grad_compressor.init(params)
+    return state
+
+
+def make_train_step(cfg: ModelConfig, optimizer,
+                    grad_compressor: GradCompressor | None = None):
+    loss_fn = make_loss_fn(cfg)
+
+    def train_step(params, state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if grad_compressor is not None:
+            grads, new_err = grad_compressor.roundtrip(grads,
+                                                       state["gc_err"])
+        params, opt = optimizer.update(grads, state["opt"], params)
+        new_state = {"opt": opt}
+        if grad_compressor is not None:
+            new_state["gc_err"] = new_err
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        return params, new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests see 1 device (per assignment: only dryrun.py forces 512).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,113 @@
+"""Per-architecture smoke tests (deliverable f): reduced configs of the
+same family run one forward/train step on CPU; shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALIASES, get_config, reduced_config
+from repro.configs.shapes import SHAPES, cell_is_applicable, input_specs
+from repro.models import encdec as E
+from repro.models import transformer as T
+
+ARCHS = list(ALIASES)
+KEY = jax.random.PRNGKey(0)
+
+
+def _finite(tree) -> bool:
+    return all(np.isfinite(np.asarray(x, np.float32)).all()
+               for x in jax.tree.leaves(tree))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = reduced_config(get_config(arch))
+    B, S = 2, 16
+    if cfg.family == "audio":
+        params = E.init_encdec_params(cfg, KEY)
+        frames = jax.random.normal(
+            KEY, (B, cfg.encoder.n_frames, cfg.d_model), jnp.bfloat16)
+        toks = jax.random.randint(KEY, (B, cfg.encoder.dec_len), 0, cfg.vocab)
+        logits = E.encdec_train(cfg, params, frames, toks)
+        assert logits.shape == (B, cfg.encoder.dec_len, cfg.vocab)
+        loss, grads = jax.value_and_grad(
+            lambda p: E.loss_fn_encdec(cfg, p, frames, toks))(params)
+    else:
+        aux = None
+        if cfg.family == "vlm":
+            aux = jax.random.normal(
+                KEY, (B, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
+        params = T.init_params(cfg, KEY)
+        toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+        logits = T.forward_train(cfg, params, toks, aux)
+        assert logits.shape == (B, S, cfg.vocab)
+        loss, grads = jax.value_and_grad(
+            lambda p: T.loss_fn(cfg, p, toks, aux))(params)
+    assert np.isfinite(float(loss))
+    assert _finite(grads), f"{arch}: non-finite grads"
+    assert _finite(logits)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_exact_assignment(arch):
+    """The full configs carry the exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    expect = {
+        "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "granite-20b": (52, 6144, 48, 1, 24576, 49152),
+        "qwen3-4b": (36, 2560, 32, 8, 9728, 151936),
+        "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expect, (arch, got, expect)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_all_shapes(arch):
+    """input_specs produce abstract specs for every applicable cell."""
+    cfg = get_config(arch)
+    for shape in SHAPES:
+        if not cell_is_applicable(cfg, shape):
+            continue
+        specs = input_specs(cfg, shape)
+        for leaf in jax.tree.leaves(
+                specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_moe_structure():
+    cfg = get_config("arctic-480b")
+    assert cfg.moe.n_experts == 128 and cfg.moe.top_k == 2
+    assert cfg.moe.dense_residual
+    cfg = get_config("mixtral-8x22b")
+    assert cfg.moe.n_experts == 8 and cfg.moe.top_k == 2
+    assert cfg.sliding_window == 4096
+
+
+def test_patterns():
+    assert get_config("gemma3-12b").pattern == ("attn_local",) * 5 + ("attn",)
+    assert get_config("recurrentgemma-2b").pattern == \
+        ("rglru", "rglru", "attn_local")
+    assert get_config("xlstm-125m").pattern == ("mlstm", "slstm")
+    assert get_config("llama-3.2-vision-90b").pattern == \
+        ("attn",) * 4 + ("cross_attn",)
+
+
+def test_param_counts_in_range():
+    """Sanity: total params within +-40% of each model's nameplate."""
+    nameplate = {
+        "gemma3-12b": 12e9, "qwen1.5-32b": 32e9, "granite-20b": 20e9,
+        "qwen3-4b": 4e9, "llama-3.2-vision-90b": 90e9, "arctic-480b": 480e9,
+        "mixtral-8x22b": 141e9, "recurrentgemma-2b": 2.7e9,
+        "xlstm-125m": 125e6, "whisper-large-v3": 1.5e9,
+    }
+    for arch, n in nameplate.items():
+        got = get_config(arch).param_count()
+        assert 0.5 * n < got < 1.6 * n, (arch, got / 1e9)

@@ -1,0 +1,116 @@
+"""Compression substrate: pwrel bound property, codec round trip, store."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.compression import (BlockStore, CompressedBlock, PwRelParams,
+                               compress_complex_block,
+                               decompress_complex_block)
+from repro.compression.codec import (prescan_decode_bitmap,
+                                     prescan_encode_bitmap)
+from repro.compression.pwrel import dequantize_plane, quantize_plane
+
+
+@settings(max_examples=30, deadline=None)
+@given(hnp.arrays(np.float32, st.integers(1, 400),
+                  elements=st.floats(min_value=np.float32(-1e30),
+                                     max_value=np.float32(1e30), width=32)),
+       st.sampled_from([1e-2, 1e-3, 1e-4]))
+def test_pwrel_pointwise_bound(x, b_r):
+    """The defining property: point-wise relative error <= b_r (f32 slack),
+    zeros exact, signs exact — for arbitrary floats incl. subnormals."""
+    from repro.compression.pwrel import log_step
+    params = PwRelParams(b_r=b_r)
+    codes, signs, l_max = quantize_plane(x, params)
+    xhat = np.asarray(dequantize_plane(codes, signs, l_max, params))
+    max_abs = float(np.abs(x).max()) if x.size else 0.0
+    floor = max_abs * 2.0 ** (-65520 * log_step(b_r))  # uint16 range floor
+    # bound holds for NORMAL floats; subnormal magnitudes may flush to 0
+    # in XLA's FTZ arithmetic (documented contract, like the paper's
+    # bitcomp on denormals)
+    big = np.abs(x) > max(floor, 1.2e-38)
+    if big.any():
+        rel = np.abs(xhat[big] - x[big]) / np.abs(x[big])
+        assert rel.max() <= b_r * 1.1 + 1e-6, rel.max()
+    assert np.all(xhat[x == 0] == 0)
+    nz = (x != 0) & (xhat != 0)
+    assert np.all(np.sign(xhat[nz]) == np.sign(x[nz]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(4, 2048), st.integers(0, 10_000), st.floats(0.0, 1.0))
+def test_codec_roundtrip(n, seed, sparsity):
+    rng = np.random.default_rng(seed)
+    amps = (rng.standard_normal(n) + 1j * rng.standard_normal(n)) \
+        .astype(np.complex64)
+    amps[rng.random(n) < sparsity] = 0
+    params = PwRelParams(b_r=1e-3)
+    blk = compress_complex_block(amps, params)
+    out = decompress_complex_block(blk, params)
+    assert out.shape == amps.shape
+    nz = amps != 0
+    if nz.any():
+        rel = np.abs(out[nz] - amps[nz]) / np.abs(amps[nz])
+        assert rel.max() < 2.5e-3        # sqrt(2)*b_r (re/im independent)
+    assert np.all(out[~nz] == 0)
+
+
+def test_codec_never_inflates():
+    rng = np.random.default_rng(0)
+    # adversarial: white noise with huge dynamic range
+    amps = (rng.standard_normal(512) * 10.0 **
+            rng.uniform(-30, 0, 512)).astype(np.complex64)
+    blk = compress_complex_block(amps, PwRelParams(1e-4))
+    assert blk.nbytes <= amps.nbytes + 16
+
+
+def test_zero_block_tiny():
+    amps = np.zeros(2 ** 12, np.complex64)
+    blk = compress_complex_block(amps, PwRelParams(1e-3))
+    assert blk.nbytes < 200              # ~1000x on all-zero blocks
+    out = decompress_complex_block(blk, PwRelParams(1e-3))
+    assert np.all(out == 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(hnp.arrays(np.bool_, st.integers(1, 5000)))
+def test_prescan_bitmap_roundtrip(bits):
+    blob = prescan_encode_bitmap(bits)
+    out = prescan_decode_bitmap(blob)
+    np.testing.assert_array_equal(out, bits)
+
+
+def test_prescan_helps_on_uniform_signs():
+    bits = np.zeros(2 ** 15, bool)       # all-positive block
+    with_ps = len(prescan_encode_bitmap(bits))
+    assert with_ps < 2 ** 15 // 8 / 10   # >10x smaller than raw packed
+
+
+def test_store_spill_and_alias(tmp_path):
+    store = BlockStore(ram_budget_bytes=100, spill_dir=str(tmp_path))
+    a = b"x" * 80
+    b_ = b"y" * 80
+    store.put(0, a)
+    store.put(1, b_)                     # exceeds budget -> disk
+    assert store.stats.n_spills == 1
+    assert store.get(0) == a and store.get(1) == b_
+    store.put_alias(2, 1)
+    assert store.get(2) == b_
+    store.put(1, b"z" * 10)              # overwrite canonical
+    assert store.get(2) == b_            # alias still sees old blob
+    assert store.get(1) == b"z" * 10
+    store.delete(2)
+    store.delete(1)
+    assert 1 not in store and 2 not in store
+    store.close()
+
+
+def test_store_byte_accounting():
+    store = BlockStore()
+    store.put(0, b"a" * 100)
+    store.put(1, b"b" * 50)
+    assert store.total_bytes == 150
+    store.put(0, b"c" * 10)              # replace
+    assert store.total_bytes == 60
+    assert store.stats.peak_ram_bytes == 160  # old+new coexist momentarily
+    store.close()

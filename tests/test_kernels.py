@@ -1,0 +1,122 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose vs ref.py
+oracles (Pallas interpret=True on CPU)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.compression.pwrel import (PwRelParams, dequantize_plane, log_step,
+                                     quantize_plane)
+from repro.core.dense_engine import apply_matrix
+from repro.kernels import ops, ref
+from repro.kernels.gate_apply import diag_apply, gemm_planes
+from repro.kernels.quantize import dequantize_tiles, quantize_tiles
+
+rng = np.random.default_rng(42)
+
+
+def _rand_unitary(K):
+    m = rng.standard_normal((K, K)) + 1j * rng.standard_normal((K, K))
+    q, r = np.linalg.qr(m)
+    return (q * (np.diag(r) / np.abs(np.diag(r)))).astype(np.complex64)
+
+
+@pytest.mark.parametrize("R,K", [(8, 8), (32, 16), (256, 64), (512, 128),
+                                 (1024, 128)])
+def test_gemm_planes_sweep(R, K):
+    ar, ai = rng.standard_normal((2, R, K)).astype(np.float32)
+    br, bi = rng.standard_normal((2, K, K)).astype(np.float32)
+    cr, ci = gemm_planes(*map(jnp.asarray, (ar, ai, br, bi)))
+    err, eri = ref.gemm_planes_ref(*map(jnp.asarray, (ar, ai, br, bi)))
+    np.testing.assert_allclose(cr, err, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(ci, eri, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("R,K", [(16, 8), (128, 32), (512, 128)])
+def test_diag_apply_sweep(R, K):
+    ar, ai = rng.standard_normal((2, R, K)).astype(np.float32)
+    d = np.exp(1j * rng.uniform(0, 2 * np.pi, K)).astype(np.complex64)
+    dr, di = np.real(d).copy(), np.imag(d).copy()
+    cr, ci = diag_apply(*map(jnp.asarray, (ar, ai, dr, di)))
+    err, eri = ref.diag_apply_ref(*map(jnp.asarray, (ar, ai, dr, di)))
+    np.testing.assert_allclose(cr, err, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(ci, eri, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("nv,k", [(5, 1), (6, 2), (8, 3), (10, 4), (12, 5)])
+def test_apply_fused_gate_vs_dense(nv, k):
+    amps = (rng.standard_normal(2 ** nv)
+            + 1j * rng.standard_normal(2 ** nv)).astype(np.complex64)
+    u = _rand_unitary(2 ** k)
+    vq = tuple(sorted(rng.choice(nv, size=k, replace=False).tolist()))
+    got = ops.apply_fused_gate(jnp.asarray(amps), jnp.asarray(u), vq, nv,
+                               diag=False)
+    want = apply_matrix(jnp.asarray(amps), jnp.asarray(u), vq, nv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("rows", [1, 4, 8, 64, 256])
+@pytest.mark.parametrize("b_r", [1e-2, 1e-3, 1e-4])
+def test_quantize_kernel_matches_pwrel_ref(rows, b_r):
+    n = rows * 128
+    x = (rng.standard_normal(n) * np.exp(rng.uniform(-25, 4, n))
+         ).astype(np.float32)
+    x[rng.random(n) < 0.15] = 0.0
+    codes_k, packed, flags, l_max_k = ops.quantize_block(jnp.asarray(x), b_r)
+    codes_r, signs_r, l_max_r = quantize_plane(x, PwRelParams(b_r))
+    np.testing.assert_array_equal(np.asarray(codes_k), np.asarray(codes_r))
+    assert np.isclose(float(l_max_k), float(l_max_r))
+    xhat = np.asarray(ops.dequantize_block(codes_k, packed, l_max_k, b_r))
+    xref = np.asarray(dequantize_plane(codes_r, signs_r, l_max_r,
+                                       PwRelParams(b_r)))
+    np.testing.assert_array_equal(xhat, xref)
+    # the bound holds above the code-range floor: max_abs * 2^-(65534*step)
+    # (elements below it quantize to exact 0 by design — see pwrel.py)
+    floor = float(np.abs(x).max()) * 2.0 ** (-65520 * log_step(b_r))
+    nz = np.abs(x) > floor
+    if nz.any():
+        rel = np.abs(xhat[nz] - x[nz]) / np.abs(x[nz])
+        assert rel.max() <= b_r * 1.1 + 1e-7
+
+
+def test_quantize_kernel_flags():
+    """Pre-scan uniformity flags: all-zero tile and uniform-sign tiles."""
+    x = np.zeros(8 * 128, np.float32)
+    _, _, flags, _ = ops.quantize_block(jnp.asarray(x), 1e-3)
+    assert int(flags[0, 0]) == 1       # all codes zero
+    assert int(flags[0, 1]) == 1       # no negative signs
+    x = -np.abs(rng.standard_normal(8 * 128)).astype(np.float32) - 0.1
+    _, _, flags, _ = ops.quantize_block(jnp.asarray(x), 1e-3)
+    assert int(flags[0, 2]) == 1       # all negative
+
+
+def test_kernels_vs_tiles_ref_direct():
+    """quantize_tiles / dequantize_tiles against their ref.py twins."""
+    rows = 16
+    x = rng.standard_normal((rows, 128)).astype(np.float32)
+    step = log_step(1e-3)
+    l_max = jnp.asarray([[float(np.log2(np.abs(x).max()))]], jnp.float32)
+    ck, pk, fk = quantize_tiles(jnp.asarray(x), l_max, step)
+    cr, pr, fr = ref.quantize_tiles_ref(jnp.asarray(x), l_max, step)
+    # codes may differ by 1 at exact rounding ties (different f32 op order
+    # inside the interpreted kernel); that's still within the pwrel bound
+    dc = np.abs(np.asarray(ck, np.int64) - np.asarray(cr, np.int64))
+    assert dc.max() <= 1 and (dc > 0).mean() < 0.005
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+    np.testing.assert_array_equal(np.asarray(fk), np.asarray(fr))
+    dk = dequantize_tiles(ck, pk, l_max, step)
+    dr = ref.dequantize_tiles_ref(cr, pr, l_max, step)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dr),
+                               rtol=float(np.exp2(step)) - 1 + 1e-6)
+
+
+def test_gemm_inside_jit():
+    """Kernel wrappers compose with jax.jit (engine use_kernel path)."""
+    @jax.jit
+    def f(a, b):
+        return gemm_planes(a, jnp.zeros_like(a), b, jnp.zeros_like(b))[0]
+
+    a = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((32, 32)), jnp.float32)
+    np.testing.assert_allclose(f(a, b), a @ b, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,53 @@
+"""Fused KV-dequant decode attention kernel vs the serving-path oracle."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.kv_dequant_attention import kv_dequant_decode_attention
+from repro.serving.kvcache import dequantize_kv, quantize_kv
+
+rng = np.random.default_rng(11)
+
+
+def _make_cache(BG, T, hd):
+    kv = jnp.asarray(rng.standard_normal((BG, T, 1, hd)), jnp.float32)
+    q = quantize_kv(kv)
+    # flatten the singleton head dim into the (BG, T, hd) kernel layout
+    return (kv[:, :, 0, :],
+            q["codes"][:, :, 0, :], q["signs"][:, :, 0, :],
+            q["scale"][:, :, 0, :])
+
+
+@pytest.mark.parametrize("BG,T,hd,rep,pos", [
+    (2, 64, 32, 2, 63), (4, 128, 64, 1, 100), (1, 256, 16, 4, 17),
+])
+def test_kv_dequant_attention_matches_oracle(BG, T, hd, rep, pos):
+    q = jnp.asarray(rng.standard_normal((BG, rep, hd)), jnp.float32)
+    _, ck, sk, lk = _make_cache(BG, T, hd)
+    _, cv, sv, lv = _make_cache(BG, T, hd)
+
+    got = kv_dequant_decode_attention(q, ck, sk, lk, cv, sv, lv, pos,
+                                      k_tile=32)
+
+    # oracle: dequantize with the serving codec, then exact attention
+    k = dequantize_kv({"codes": ck[:, :, None], "signs": sk[:, :, None],
+                       "scale": lk[:, :, None]}, jnp.float32)[:, :, 0]
+    v = dequantize_kv({"codes": cv[:, :, None], "signs": sv[:, :, None],
+                       "scale": lv[:, :, None]}, jnp.float32)[:, :, 0]
+    s = jnp.einsum("brd,btd->brt", q, k) * (hd ** -0.5)
+    mask = jnp.arange(T)[None, None] <= pos
+    s = jnp.where(mask, s, -2.0 ** 30)
+    p = jax.nn.softmax(s, axis=-1)
+    want = jnp.einsum("brt,btd->brd", p, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_kernel_reads_fewer_bytes():
+    """The point of the kernel: compressed operands are ~2.11x smaller."""
+    BG, T, hd = 2, 128, 64
+    kv, ck, sk, lk = _make_cache(BG, T, hd)
+    raw = kv.astype(jnp.bfloat16).nbytes
+    comp = ck.nbytes + sk.nbytes + lk.nbytes
+    assert raw / comp > 1.6

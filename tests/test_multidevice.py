@@ -1,0 +1,105 @@
+"""Multi-device behaviour (subprocess with 8 host devices, since the
+parent process is pinned to 1 device): BMQSIM group-parallel equivalence,
+dense sharded baseline, sharding rules on a real mesh."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run_sub(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_engine_multidevice_equals_single():
+    """SV groups round-robined over 8 devices == single device (zero
+    collectives by construction — the paper's multi-GPU property)."""
+    out = _run_sub("""
+        import jax, numpy as np
+        from repro.core import build_circuit, simulate_bmqsim, EngineConfig, simulate_dense, fidelity
+        qc = build_circuit("qft", 10)
+        ideal = np.asarray(simulate_dense(qc))
+        s1, st1 = simulate_bmqsim(qc, EngineConfig(local_bits=4))
+        s8, st8 = simulate_bmqsim(qc, EngineConfig(local_bits=4,
+                                                   devices=jax.devices()))
+        assert len(jax.devices()) == 8
+        np.testing.assert_allclose(s1, s8, atol=2e-5)
+        print("FID", fidelity(ideal.astype(np.complex128), s8.astype(np.complex128)))
+    """)
+    assert float(out.split("FID")[1]) > 0.99
+
+
+def test_dense_sharded_baseline():
+    """SV-Sim-like pjit engine (state sharded over devices) == dense."""
+    out = _run_sub("""
+        import jax, numpy as np
+        from repro.core import build_circuit, simulate_dense, simulate_dense_sharded
+        qc = build_circuit("ghz_state", 8)
+        mesh = jax.make_mesh((8,), ("data",))
+        a = np.asarray(simulate_dense(qc))
+        b = np.asarray(simulate_dense_sharded(qc, mesh))
+        np.testing.assert_allclose(a, b, atol=1e-6)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_train_step_runs():
+    """A reduced model executes a REAL sharded train step on a 4x2 mesh
+    with the production sharding rules (not just lowering)."""
+    out = _run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config, reduced_config
+        from repro.distributed.sharding import param_pspecs, named_shardings
+        from repro.models import transformer as T
+        from repro.optim import AdamW
+        from repro.train.step import init_train_state, make_train_step
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        cfg = reduced_config(get_config("qwen3-4b")).with_(remat=False)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        pspecs = param_pspecs(cfg, params, mesh)
+        params = jax.device_put(params, named_shardings(pspecs, mesh))
+        opt = AdamW(lr=1e-3)
+        state = init_train_state(cfg, params, opt)
+        step = jax.jit(make_train_step(cfg, opt))
+        toks = jnp.zeros((8, 16), jnp.int32)
+        with jax.set_mesh(mesh):
+            params, state, m = step(params, state, {"tokens": toks})
+        assert np.isfinite(float(m["loss"]))
+        # params kept their shardings through the step
+        leaf = params["units"][0]["attn"]["wq"]
+        assert not leaf.sharding.is_fully_replicated
+        print("LOSS", float(m["loss"]))
+    """)
+    assert "LOSS" in out
+
+
+def test_multidevice_scaling_stats():
+    """Fig. 13 harness sanity: per-device group placement covers all groups."""
+    out = _run_sub("""
+        import jax
+        from repro.core import build_circuit, EngineConfig
+        from repro.core.engine import BMQSimEngine
+        qc = build_circuit("qaoa", 10)
+        eng = BMQSimEngine(qc, EngineConfig(local_bits=4,
+                                            devices=jax.devices()))
+        state = eng.run()
+        import numpy as np
+        print("NORM", float(np.linalg.norm(state)))
+        eng.close()
+    """)
+    assert abs(float(out.split("NORM")[1]) - 1.0) < 5e-3

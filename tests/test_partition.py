@@ -1,0 +1,86 @@
+"""Property tests (hypothesis): partition validity, fusion, group math."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (GroupLayout, gates_to_unitary, fuse_gates,
+                        partition_circuit, random_circuit)
+from repro.core.dense_engine import apply_matrix, initial_state
+import jax.numpy as jnp
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(3, 10), b=st.integers(0, 6), inner=st.integers(2, 4),
+       n_gates=st.integers(1, 60), seed=st.integers(0, 10_000))
+def test_partition_invariants(n, b, inner, n_gates, seed):
+    b = min(b, n)
+    qc = random_circuit(n, n_gates, seed=seed)
+    part = partition_circuit(qc, local_bits=b, inner_size=inner)
+    # (1) gates preserved in order
+    flat = [g for stg in part.stages for g in stg.gates]
+    assert flat == qc.gates
+    # (2) per-stage global support bounded
+    thr = max(inner, 2)
+    for stg in part.stages:
+        sup = {q for g in stg.gates for q in g.qubits if q >= b}
+        assert len(sup) <= thr
+        assert sup == set(stg.inner)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 8), n_gates=st.integers(1, 25),
+       f=st.integers(2, 5), seed=st.integers(0, 10_000))
+def test_fusion_equivalence(n, n_gates, f, seed):
+    """Fused unitaries applied in order == original gate sequence."""
+    qc = random_circuit(n, n_gates, seed=seed, two_qubit_frac=0.5)
+    fused = fuse_gates(qc.gates, max_fused_qubits=max(f, 2))
+    state = initial_state(n, jnp.complex64)
+    for g in qc.gates:
+        state = apply_matrix(state, jnp.asarray(g.matrix, jnp.complex64),
+                             g.qubits, n)
+    state2 = initial_state(n, jnp.complex64)
+    for fg in fused:
+        state2 = apply_matrix(state2, jnp.asarray(fg.matrix, jnp.complex64),
+                              fg.qubits, n)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(state2),
+                               atol=2e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 12), b=st.integers(0, 8),
+       seed=st.integers(0, 10_000), data=st.data())
+def test_group_block_ids_partition_blocks(n, b, seed, data):
+    """Every block id appears exactly once across groups; member order
+    spells the inner-assignment integer."""
+    b = min(b, n)
+    c = n - b
+    rng = np.random.default_rng(seed)
+    m = data.draw(st.integers(0, min(3, c)))
+    inner = tuple(sorted(rng.choice(np.arange(b, n), size=m, replace=False).tolist()))
+    lay = GroupLayout(n, b, inner)
+    ids = lay.group_block_ids()
+    assert ids.shape == (lay.n_groups, lay.blocks_per_group)
+    flat = ids.reshape(-1)
+    assert sorted(flat.tolist()) == list(range(2 ** c))
+    # member i of any group has inner bits spelling i
+    for g in range(min(4, lay.n_groups)):
+        for i in range(lay.blocks_per_group):
+            got = 0
+            for j, p in enumerate(lay.inner_positions):
+                got |= ((int(ids[g, i]) >> p) & 1) << j
+            assert got == i
+
+
+def test_gates_to_unitary_is_unitary():
+    qc = random_circuit(4, 12, seed=3)
+    u = gates_to_unitary(qc.gates, (0, 1, 2, 3))
+    np.testing.assert_allclose(u @ u.conj().T, np.eye(16), atol=1e-10)
+
+
+@settings(max_examples=15, deadline=None)
+@given(q=st.integers(0, 5))
+def test_virtual_qubit_map(q):
+    lay = GroupLayout(10, 4, (5, 7))
+    if q < 4:
+        assert lay.virtual_qubit(q) == q
+    assert lay.virtual_qubit(5) == 4
+    assert lay.virtual_qubit(7) == 5

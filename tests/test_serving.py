@@ -1,0 +1,134 @@
+"""Serving: prefill/decode == train-forward logits; compressed-KV decode
+matches raw within the pwrel bound; ring caches at long context."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.models import transformer as T
+from repro.models import encdec as E
+from repro.serving.kvcache import (compress_prefill_cache, dequantize_kv,
+                                   kv_bytes_ratio, quantize_kv)
+
+KEY = jax.random.PRNGKey(3)
+
+CONSISTENCY_ARCHS = ["gemma3-12b", "qwen3-4b", "mixtral-8x22b",
+                     "recurrentgemma-2b", "granite-20b"]
+
+
+def _setup(arch, B=2, S=24):
+    cfg = reduced_config(get_config(arch))
+    params = T.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    return cfg, params, toks
+
+
+@pytest.mark.parametrize("arch", CONSISTENCY_ARCHS)
+def test_prefill_decode_matches_train_forward(arch):
+    cfg, params, toks = _setup(arch)
+    B, S = toks.shape
+    ref = T.forward_train(cfg, params, toks)
+    lp, cache = T.forward_prefill(cfg, params, toks[:, :S - 4], max_len=S)
+    scale = float(jnp.max(jnp.abs(ref)))
+    assert float(jnp.max(jnp.abs(lp - ref[:, S - 5]))) < 2e-2 * scale
+    for i in range(4):
+        pos = S - 4 + i
+        lg, cache = T.forward_decode(cfg, params, toks[:, pos:pos + 1],
+                                     cache, pos)
+        err = float(jnp.max(jnp.abs(lg - ref[:, pos])))
+        assert err < 2e-2 * scale, (arch, pos, err / scale)
+
+
+def test_ring_cache_matches_full_cache():
+    """Sliding-window ring buffer == full cache + window mask."""
+    cfg, params, toks = _setup("mixtral-8x22b", S=30)
+    B, S = toks.shape
+    W = cfg.sliding_window
+    assert W and W < S                  # ring actually engaged
+    ref = T.forward_train(cfg, params, toks)
+    lp, cache = T.forward_prefill(cfg, params, toks[:, :S - 6], max_len=S)
+    # cache is ring-sized
+    k_leaf = jax.tree.leaves(cache["units"][0])[0]
+    assert k_leaf.shape[2] == W
+    scale = float(jnp.max(jnp.abs(ref)))
+    for i in range(6):
+        pos = S - 6 + i
+        lg, cache = T.forward_decode(cfg, params, toks[:, pos:pos + 1],
+                                     cache, pos)
+        err = float(jnp.max(jnp.abs(lg - ref[:, pos])))
+        assert err < 2e-2 * scale, (pos, err / scale)
+
+
+def test_kv_quantization_bound():
+    x = jax.random.normal(KEY, (2, 16, 4, 32), jnp.bfloat16)
+    q = quantize_kv(x)
+    xhat = dequantize_kv(q)
+    xf = np.asarray(x, np.float32)
+    xh = np.asarray(xhat, np.float32)
+    nz = np.abs(xf) > np.abs(xf).max() * 2 ** -15
+    rel = np.abs(xh[nz] - xf[nz]) / np.abs(xf[nz])
+    assert rel.max() < 0.03             # 2^(step/2)-1 ~ 2.2% + bf16 noise
+    assert kv_bytes_ratio(128) > 1.7
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "granite-20b", "gemma3-12b"])
+def test_compressed_kv_decode_matches_raw(arch):
+    cfg, params, toks = _setup(arch)
+    B, S = toks.shape
+    lp, cache = T.forward_prefill(cfg, params, toks[:, :S - 4], max_len=S)
+    qcache = compress_prefill_cache(cache)
+    raw, comp = cache, qcache
+    for i in range(4):
+        pos = S - 4 + i
+        lg_r, raw = T.forward_decode(cfg, params, toks[:, pos:pos + 1],
+                                     raw, pos)
+        lg_c, comp = T.forward_decode(cfg, params, toks[:, pos:pos + 1],
+                                      comp, pos)
+        scale = float(jnp.max(jnp.abs(lg_r)))
+        err = float(jnp.max(jnp.abs(lg_r - lg_c)))
+        assert err < 5e-2 * scale, (arch, pos, err / scale)
+
+
+def test_compressed_cache_smaller():
+    cfg, params, toks = _setup("qwen3-4b")
+    _, cache = T.forward_prefill(cfg, params, toks, max_len=toks.shape[1])
+    qcache = compress_prefill_cache(cache)
+    raw_b = sum(x.nbytes for x in jax.tree.leaves(cache))
+    q_b = sum(x.nbytes for x in jax.tree.leaves(qcache))
+    assert q_b < raw_b * 0.72           # ~1.78x smaller
+
+
+def test_encdec_serving():
+    cfg = reduced_config(get_config("whisper-large-v3"))
+    params = E.init_encdec_params(cfg, KEY)
+    B = 2
+    frames = jax.random.normal(KEY, (B, cfg.encoder.n_frames, cfg.d_model),
+                               jnp.bfloat16)
+    toks = jax.random.randint(KEY, (B, cfg.encoder.dec_len), 0, cfg.vocab)
+    ref = E.encdec_train(cfg, params, frames, toks)
+    S = toks.shape[1]
+    lp, cache = E.encdec_prefill(cfg, params, frames, toks[:, :S - 2],
+                                 max_len=S)
+    scale = float(jnp.max(jnp.abs(ref)))
+    assert float(jnp.max(jnp.abs(lp - ref[:, S - 3]))) < 2e-2 * scale
+    for i in range(2):
+        pos = S - 2 + i
+        lg, cache = E.encdec_decode(cfg, params, toks[:, pos:pos + 1],
+                                    cache, pos)
+        assert float(jnp.max(jnp.abs(lg - ref[:, pos]))) < 2e-2 * scale
+
+
+def test_greedy_generation_runs():
+    """End-to-end generation loop (quickstart example behaviour)."""
+    cfg, params, toks = _setup("qwen3-4b", S=8)
+    lg, cache = T.forward_prefill(cfg, params, toks, max_len=24)
+    out = []
+    tok = jnp.argmax(lg, -1)[:, None]
+    for i in range(8):
+        out.append(np.asarray(tok))
+        lg, cache = T.forward_decode(cfg, params, tok, cache, 8 + i)
+        tok = jnp.argmax(lg, -1)[:, None]
+    gen = np.concatenate(out, 1)
+    assert gen.shape == (2, 8)
+    assert (gen >= 0).all() and (gen < cfg.vocab).all()
