@@ -1,4 +1,5 @@
-"""Fig. 11: compression overhead — BMQSIM vs BMQSIM-without-compression."""
+"""Fig. 11: compression overhead — BMQSIM vs BMQSIM-without-compression —
+plus the per-stage host↔device traffic each codec backend pays."""
 from .common import emit, run_engine
 
 
@@ -12,6 +13,14 @@ def main():
             emit("overhead", f"{name}_{n}_without_s", t_n)
             emit("overhead", f"{name}_{n}_overhead_pct",
                  100.0 * (t_c - t_n) / t_n)
+            # boundary traffic per stage, both codec backends
+            _, _, s_d, _ = run_engine(name, n, local_bits=n - 6,
+                                      codec_backend="device")
+            for label, s in (("host", s_c), ("device", s_d)):
+                emit("overhead", f"{name}_{n}_{label}_h2d_bytes_per_stage",
+                     s.h2d_bytes / max(1, s.n_stages))
+                emit("overhead", f"{name}_{n}_{label}_d2h_bytes_per_stage",
+                     s.d2h_bytes / max(1, s.n_stages))
 
 
 if __name__ == "__main__":

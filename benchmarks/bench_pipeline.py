@@ -1,4 +1,10 @@
-"""Fig. 12: pipeline depth sweep (paper: CUDA stream count)."""
+"""Fig. 12 + §4.3 boundary traffic: pipeline depth sweep and codec-backend
+comparison (host vs device-resident lossy codec).
+
+Emits, per backend, the host↔device bytes moved per stage — the quantity
+the device codec shrinks by shipping packed codes + sign bitmaps instead
+of raw complex64 group arrays.
+"""
 from .common import emit, run_engine
 
 
@@ -10,6 +16,26 @@ def main():
         base = base or t
         emit("pipeline", f"depth_{depth}_s", t)
         emit("pipeline", f"depth_{depth}_speedup", base / t)
+
+    # codec backend: boundary bytes per stage, host vs device
+    stats_by_backend = {}
+    for backend in ("host", "device"):
+        _, _, stats, t = run_engine("qft", 14, local_bits=7,
+                                    codec_backend=backend)
+        stats_by_backend[backend] = stats
+        emit("pipeline", f"backend_{backend}_s", t)
+        emit("pipeline", f"backend_{backend}_h2d_bytes", stats.h2d_bytes)
+        emit("pipeline", f"backend_{backend}_d2h_bytes", stats.d2h_bytes)
+        emit("pipeline", f"backend_{backend}_h2d_bytes_per_stage",
+             stats.h2d_bytes / max(1, stats.n_stages))
+        emit("pipeline", f"backend_{backend}_d2h_bytes_per_stage",
+             stats.d2h_bytes / max(1, stats.n_stages))
+        for i, (h2d, d2h) in enumerate(stats.per_stage_boundary_bytes):
+            emit("pipeline", f"backend_{backend}_stage{i}_h2d_bytes", h2d)
+            emit("pipeline", f"backend_{backend}_stage{i}_d2h_bytes", d2h)
+    host, dev = stats_by_backend["host"], stats_by_backend["device"]
+    emit("pipeline", "device_boundary_reduction",
+         host.boundary_bytes / max(1, dev.boundary_bytes))
 
 
 if __name__ == "__main__":

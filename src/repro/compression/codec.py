@@ -1,94 +1,43 @@
-"""Host-side lossless stage + block container (paper §4.3 lines 15-17).
+"""Host block codec: pwrel lossy stage + lossless stage (paper §4.3).
 
 Per complex SV block:
 
-* re/im planes are pwrel-quantized (``pwrel.py`` / the Pallas kernel) into
-  uint16 codes + sign bitmaps + per-plane ``l_max``.
-* bitmaps get the *pre-scan*: split into chunks, drop all-0 / all-1 chunks
-  (signs repeat over long ranges — the paper's warp-ballot observation),
-  keep a 2-bit flag per chunk, then lossless-encode what remains.
-* code streams are lossless-encoded (zlib here; bitcomp's lossless stage in
-  the paper).  If the payload would exceed the raw block, a RAW escape
-  stores the original complex bytes — compression never inflates.
+* re/im planes are pwrel-quantized (``pwrel.py``; the device pipeline uses
+  the Pallas kernels in ``kernels/quantize.py`` instead) into uint16 codes
+  + sign bitmaps + per-plane ``l_max``.
+* the lossless stage (``lossless.py``) pre-scans the bitmaps and
+  zlib-encodes the code streams.  If the payload would exceed the raw
+  block, a RAW escape stores the original complex bytes — compression
+  never inflates.
 
-The byte layout is self-describing so blocks round-trip through the
-two-level store (RAM / disk tiers) unchanged.
+The structured result is a :class:`~repro.compression.segments.BlockSegments`
+(``encode_block_host`` / ``decode_block_host``) — the unit the two-level
+store and the stage pipeline traffic in.  ``compress_complex_block`` /
+``decompress_complex_block`` are the flat-bytes convenience API over the
+same self-describing layout (see ``segments.py`` for the byte format).
 """
 from __future__ import annotations
 
-import struct
-import zlib
 from dataclasses import dataclass
 
 import numpy as np
 
-from .pwrel import PwRelParams, quantize_plane, dequantize_plane
+from .lossless import (decode_bitmap, decode_codes, encode_bitmap,
+                       encode_codes, prescan_decode_bitmap,
+                       prescan_encode_bitmap)
+from .pwrel import PwRelParams, dequantize_plane, quantize_plane
+from .segments import BlockSegments, PlaneSegments
 
 __all__ = [
     "CompressedBlock", "compress_complex_block", "decompress_complex_block",
+    "encode_block_host", "decode_block_host",
     "prescan_encode_bitmap", "prescan_decode_bitmap",
 ]
-
-_FMT_PWREL = 1   # pwrel codes + bitmaps
-_FMT_RAW = 2     # raw complex64 escape
-_CHUNK_BYTES = 128          # bitmap pre-scan chunk = 1024 bits
-_ZLEVEL = 1                 # throughput-oriented, like bitcomp
-
-_FLAG_ZERO, _FLAG_ONE, _FLAG_MIXED = 0, 1, 2
-
-
-def prescan_encode_bitmap(bits: np.ndarray) -> bytes:
-    """Pack a bool array to bits, RLE away uniform chunks, zlib the rest.
-
-    Layout: u32 n_bits | u32 n_mixed | flags(2b/chunk, packed) | z(mixed).
-    """
-    bits = np.asarray(bits, dtype=bool).reshape(-1)
-    packed = np.packbits(bits)  # big-endian bit order within bytes
-    n = packed.size
-    n_chunks = (n + _CHUNK_BYTES - 1) // _CHUNK_BYTES
-    pad = n_chunks * _CHUNK_BYTES - n
-    if pad:
-        packed = np.concatenate([packed, np.zeros(pad, dtype=np.uint8)])
-    chunks = packed.reshape(n_chunks, _CHUNK_BYTES)
-    all_zero = (chunks == 0x00).all(axis=1)
-    all_one = (chunks == 0xFF).all(axis=1)
-    flags = np.full(n_chunks, _FLAG_MIXED, dtype=np.uint8)
-    flags[all_zero] = _FLAG_ZERO
-    flags[all_one] = _FLAG_ONE
-    mixed = chunks[flags == _FLAG_MIXED]
-    # pack 2-bit flags, 4 per byte
-    fpad = (-len(flags)) % 4
-    fl = np.concatenate([flags, np.zeros(fpad, dtype=np.uint8)]).reshape(-1, 4)
-    fpacked = (fl[:, 0] | (fl[:, 1] << 2) | (fl[:, 2] << 4) | (fl[:, 3] << 6))
-    zmixed = zlib.compress(mixed.tobytes(), _ZLEVEL)
-    head = struct.pack("<II", int(bits.size), int(mixed.shape[0]))
-    return head + fpacked.astype(np.uint8).tobytes() + zmixed
-
-
-def prescan_decode_bitmap(blob: bytes) -> np.ndarray:
-    n_bits, n_mixed = struct.unpack_from("<II", blob, 0)
-    n_bytes = (n_bits + 7) // 8
-    n_chunks = (n_bytes + _CHUNK_BYTES - 1) // _CHUNK_BYTES
-    f_len = (n_chunks + 3) // 4
-    off = 8
-    fpacked = np.frombuffer(blob, dtype=np.uint8, count=f_len, offset=off)
-    off += f_len
-    flags = np.empty(n_chunks, dtype=np.uint8)
-    idx = np.arange(n_chunks)
-    flags[:] = (fpacked[idx // 4] >> (2 * (idx % 4))) & 0x3
-    mixed = np.frombuffer(zlib.decompress(blob[off:]), dtype=np.uint8)
-    mixed = mixed.reshape(n_mixed, _CHUNK_BYTES) if n_mixed else \
-        mixed.reshape(0, _CHUNK_BYTES)
-    chunks = np.zeros((n_chunks, _CHUNK_BYTES), dtype=np.uint8)
-    chunks[flags == _FLAG_ONE] = 0xFF
-    chunks[flags == _FLAG_MIXED] = mixed
-    packed = chunks.reshape(-1)[:n_bytes]
-    return np.unpackbits(packed, count=n_bits).astype(bool)
 
 
 @dataclass(frozen=True)
 class CompressedBlock:
-    """One compressed SV block, ready for the two-level store."""
+    """One compressed SV block as flat bytes, ready for the two-level store."""
 
     payload: bytes
     n_amps: int  # complex amplitudes in the block
@@ -106,60 +55,88 @@ class CompressedBlock:
         return self.raw_nbytes / max(1, self.nbytes)
 
 
-def _encode_plane(x: np.ndarray, params: PwRelParams,
-                  prescan: bool) -> tuple[bytes, float]:
+def _encode_plane_host(x: np.ndarray, params: PwRelParams,
+                       prescan: bool) -> PlaneSegments:
     codes, signs, l_max = quantize_plane(x, params)
-    codes_b = zlib.compress(np.asarray(codes, dtype=np.uint16).tobytes(), _ZLEVEL)
-    signs_np = np.asarray(signs)
-    if prescan:
-        bitmap_b = prescan_encode_bitmap(signs_np)
-    else:
-        bitmap_b = zlib.compress(np.packbits(signs_np).tobytes(), _ZLEVEL)
-    seg = struct.pack("<fII", float(l_max), len(codes_b), len(bitmap_b))
-    return seg + codes_b + bitmap_b, float(l_max)
+    return PlaneSegments(
+        l_max=float(l_max),
+        codes=encode_codes(np.asarray(codes, dtype=np.uint16)),
+        bitmap=encode_bitmap(np.asarray(signs), prescan),
+    )
 
 
-def _decode_plane(blob: bytes, off: int, n: int, params: PwRelParams,
-                  prescan: bool) -> tuple[np.ndarray, int]:
-    l_max, len_codes, len_bitmap = struct.unpack_from("<fII", blob, off)
-    off += 12
-    codes = np.frombuffer(zlib.decompress(blob[off:off + len_codes]),
-                          dtype=np.uint16)
-    off += len_codes
-    braw = blob[off:off + len_bitmap]
-    off += len_bitmap
-    if prescan:
-        signs = prescan_decode_bitmap(braw)
-    else:
-        signs = np.unpackbits(
-            np.frombuffer(zlib.decompress(braw), dtype=np.uint8), count=n
-        ).astype(bool)
-    plane = np.asarray(dequantize_plane(codes, signs, l_max, params))
-    return plane, off
+def _decode_plane_host(p: PlaneSegments, n: int, params: PwRelParams,
+                       prescan: bool) -> np.ndarray:
+    codes = decode_codes(p.codes, n)
+    signs = decode_bitmap(p.bitmap, n, prescan)
+    return np.asarray(dequantize_plane(codes, signs, p.l_max, params))
+
+
+def encode_block_host(amps: np.ndarray, params: PwRelParams,
+                      prescan: bool = True) -> BlockSegments:
+    """Compress a complex64 block entirely on the host.
+
+    Args:
+        amps: complex amplitudes, flattened to 1-D (any shape accepted).
+        params: the point-wise relative bound (``PwRelParams.b_r``).
+        prescan: RLE uniform bitmap chunks before zlib (§4.3 pre-scan).
+
+    Returns:
+        Structured segments; falls back to the RAW escape when the pwrel
+        payload would be larger than the raw complex bytes.
+    """
+    amps = np.asarray(amps, dtype=np.complex64).reshape(-1)
+    seg = BlockSegments(
+        n_amps=amps.size, prescan=prescan,
+        re=_encode_plane_host(amps.real.copy(), params, prescan),
+        im=_encode_plane_host(amps.imag.copy(), params, prescan),
+    )
+    if seg.nbytes >= seg.raw_nbytes + 8:
+        seg = BlockSegments(n_amps=amps.size, raw=amps.tobytes())
+    return seg
+
+
+def decode_block_host(seg: BlockSegments, params: PwRelParams) -> np.ndarray:
+    """Inverse of :func:`encode_block_host` -> complex64 amplitudes (1-D)."""
+    if seg.is_raw:
+        return np.frombuffer(seg.raw, dtype=np.complex64,
+                             count=seg.n_amps).copy()
+    re = _decode_plane_host(seg.re, seg.n_amps, params, seg.prescan)
+    im = _decode_plane_host(seg.im, seg.n_amps, params, seg.prescan)
+    return (re + 1j * im).astype(np.complex64)
 
 
 def compress_complex_block(amps: np.ndarray, params: PwRelParams,
                            prescan: bool = True) -> CompressedBlock:
-    """complex64 block -> CompressedBlock (pwrel payload or RAW escape)."""
+    """complex64 block -> :class:`CompressedBlock` (pwrel payload or RAW).
+
+    Args:
+        amps: complex amplitudes; flattened to 1-D.
+        params: :class:`~repro.compression.pwrel.PwRelParams` — the
+            point-wise relative error bound ``b_r``.
+        prescan: enable the §4.3 bitmap pre-scan RLE.
+
+    Returns:
+        A :class:`CompressedBlock` whose ``payload`` is the self-describing
+        byte layout documented in ``segments.py``; never larger than the
+        raw block plus a fixed 8-byte header.
+    """
     amps = np.asarray(amps, dtype=np.complex64).reshape(-1)
-    n = amps.size
-    re_b, _ = _encode_plane(amps.real.copy(), params, prescan)
-    im_b, _ = _encode_plane(amps.imag.copy(), params, prescan)
-    head = struct.pack("<BBHI", _FMT_PWREL, int(prescan), 0, n)
-    payload = head + re_b + im_b
-    raw = amps.tobytes()
-    if len(payload) >= len(raw) + 8:
-        payload = struct.pack("<BBHI", _FMT_RAW, 0, 0, n) + raw
-    return CompressedBlock(payload=payload, n_amps=n)
+    seg = encode_block_host(amps, params, prescan)
+    return CompressedBlock(payload=seg.to_bytes(), n_amps=amps.size)
 
 
 def decompress_complex_block(block: CompressedBlock | bytes,
                              params: PwRelParams) -> np.ndarray:
+    """Inverse of :func:`compress_complex_block`.
+
+    Args:
+        block: a :class:`CompressedBlock` or its raw ``payload`` bytes.
+        params: must carry the same ``b_r`` used to compress.
+
+    Returns:
+        The reconstructed complex64 amplitudes (1-D), each non-zero element
+        within relative error ``b_r`` per real plane.
+    """
     blob = block.payload if isinstance(block, CompressedBlock) else block
-    fmt, prescan, _, n = struct.unpack_from("<BBHI", blob, 0)
-    off = 8
-    if fmt == _FMT_RAW:
-        return np.frombuffer(blob, dtype=np.complex64, count=n, offset=off).copy()
-    re, off = _decode_plane(blob, off, n, params, bool(prescan))
-    im, off = _decode_plane(blob, off, n, params, bool(prescan))
-    return (re + 1j * im).astype(np.complex64)
+    return decode_block_host(BlockSegments.from_bytes(blob), params)

@@ -1,0 +1,293 @@
+"""Device-resident lossy codec (paper §4.3 on the accelerator).
+
+The paper's headline design point: the lossy half of the compressor runs
+*next to the compute*, so only the compressed representation crosses the
+host↔device boundary.  Per real plane of an n-amplitude block, the wire
+format is exact-sized:
+
+    codes       (n,)              uint16  — quantizer output, packed into
+                                            u16-pair words by
+                                            ``kernels.pack.pack_codes_tiles``
+                                            and bitcast for transfer
+    sign_bytes  (4*ceil(n/32),)   uint8   — ballot-packed sign bits
+                                            (LSB-first, fused into
+                                            ``quantize_tiles``)
+    l_max       (1, 1)            float32 — quantizer anchor scalar
+
+i.e. ~2.13 bytes per element instead of 4 (f32) — ~4.25 vs 8 bytes per
+complex amplitude — before the host lossless stage shrinks it further.
+
+Encode path (device -> store):   ``encode_group_device`` dispatches the
+quantize + pack kernels per block, ``wire_to_segments`` runs the host
+lossless stage on the fetched wire arrays.
+
+Decode path (store -> device):   ``segments_to_wire`` inflates a block's
+segments back to wire arrays, ``decode_block_device`` ships them to the
+accelerator and runs unpack + dequantize there.
+
+Planes are zero-padded on device to a multiple of 128 lanes around the
+kernels; pad elements quantize to the exact-zero escape code and never
+cross the boundary or reach the store — pwrel-format blocks written by one
+backend are bit-identical to the other's, so the two are freely
+interchangeable.  (RAW-escape blocks are the one exception: the device
+path never ships raw amplitudes, so its RAW fallback stores the lossy
+reconstruction — same size bound, same error bound, different bytes.)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..kernels import pack as _pk
+from ..kernels import quantize as _qz
+from .lossless import decode_bitmap, decode_codes, encode_bitmap, encode_codes
+from .pwrel import CODE_MAX, PwRelParams, log_step
+from .segments import BlockSegments, PlaneSegments
+
+__all__ = [
+    "PlaneWire", "plane_geometry", "sign_wire_bytes",
+    "encode_group_device", "fetch_group_wire", "wire_to_segments",
+    "segments_to_wire", "decode_block_device", "decode_blocks_device",
+]
+
+_LANES = 128
+
+
+class PlaneWire(NamedTuple):
+    """One plane's boundary-crossing representation (device or host arrays)."""
+
+    codes: jax.Array | np.ndarray        # (n,) u16
+    sign_bytes: jax.Array | np.ndarray   # (4*ceil(n/32),) u8, LSB-first
+    l_max: jax.Array | np.ndarray        # (1, 1) f32
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.codes.nbytes + self.sign_bytes.nbytes
+                   + self.l_max.nbytes)
+
+
+def plane_geometry(n: int) -> tuple[int, int]:
+    """(rows, pad) for an n-element plane padded to 128-lane rows."""
+    pad = (-n) % _LANES
+    return (n + pad) // _LANES, pad
+
+
+def sign_wire_bytes(n: int) -> int:
+    """Sign-bitmap wire size: whole ballot words, 4 bytes per 32 elements."""
+    return 4 * ((n + 31) // 32)
+
+
+# --------------------------------------------------------------------------
+# encode: device kernels -> wire -> host lossless stage
+# --------------------------------------------------------------------------
+
+def _encode_plane_dev(x: jax.Array, pad: int, step: float,
+                      interpret: bool) -> PlaneWire:
+    n = x.shape[0]
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), jnp.float32)])
+    x2d = x.reshape(-1, _LANES)
+    max_abs = jnp.max(jnp.abs(x2d))
+    l_max = jnp.where(max_abs > 0,
+                      jnp.log2(jnp.maximum(max_abs, 1e-45)), 0.0)
+    l_max = l_max.reshape(1, 1).astype(jnp.float32)
+    codes, packed_signs, _flags = _qz.quantize_tiles(x2d, l_max, step,
+                                                     interpret=interpret)
+    packed_codes = _pk.pack_codes_tiles(codes, interpret=interpret)
+    codes_u16 = lax.bitcast_convert_type(packed_codes,
+                                         jnp.uint16).reshape(-1)[:n]
+    sign_bytes = lax.bitcast_convert_type(
+        packed_signs, jnp.uint8).reshape(-1)[:sign_wire_bytes(n)]
+    return PlaneWire(codes_u16, sign_bytes, l_max)
+
+
+@partial(jax.jit, static_argnames=("n_blocks", "step", "interpret"))
+def _encode_group_jit(amps: jax.Array, n_blocks: int, step: float,
+                      interpret: bool):
+    bsz = amps.shape[0] // n_blocks
+    _, pad = plane_geometry(bsz)
+    blocks = amps.reshape(n_blocks, bsz)
+    out = []
+    for i in range(n_blocks):
+        blk = blocks[i]
+        out.append((
+            _encode_plane_dev(jnp.real(blk).astype(jnp.float32), pad, step,
+                              interpret),
+            _encode_plane_dev(jnp.imag(blk).astype(jnp.float32), pad, step,
+                              interpret),
+        ))
+    return tuple(out)
+
+
+def encode_group_device(amps: jax.Array, n_blocks: int, params: PwRelParams,
+                        *, interpret: bool = True):
+    """Dispatch the lossy encode of a flat group array on its device.
+
+    Args:
+        amps: (n_blocks * 2^b,) complex64 group array (device-resident).
+        n_blocks: SV blocks in the group (2^m).
+        params: pwrel bound.
+
+    Returns:
+        Tuple of ``(re: PlaneWire, im: PlaneWire)`` per block — device
+        arrays, dispatched asynchronously (nothing is fetched yet).
+    """
+    return _encode_group_jit(amps, n_blocks, log_step(params.b_r), interpret)
+
+
+def fetch_group_wire(encoded) -> tuple[list[tuple[PlaneWire, PlaneWire]], int]:
+    """Block on the device encode and fetch wire arrays to host numpy.
+
+    Returns (per-block host PlaneWire pairs, total bytes moved d2h).
+    """
+    out, moved = [], 0
+    for re_w, im_w in encoded:
+        host_pair = []
+        for w in (re_w, im_w):
+            h = PlaneWire(np.asarray(w.codes), np.asarray(w.sign_bytes),
+                          np.asarray(w.l_max))
+            moved += h.nbytes
+            host_pair.append(h)
+        out.append(tuple(host_pair))
+    return out, moved
+
+
+def _wire_plane_to_segments(w: PlaneWire, n: int,
+                            prescan: bool) -> PlaneSegments:
+    u16 = np.asarray(w.codes, dtype="<u2")
+    bits = np.unpackbits(np.asarray(w.sign_bytes, dtype=np.uint8),
+                         bitorder="little", count=n).astype(bool)
+    return PlaneSegments(l_max=float(np.asarray(w.l_max).reshape(())),
+                         codes=encode_codes(u16),
+                         bitmap=encode_bitmap(bits, prescan))
+
+
+def _wire_plane_to_f32(w: PlaneWire, n: int, step: float) -> np.ndarray:
+    """Pure-numpy dequantize of a host wire plane (pwrel.py math, GIL-free)."""
+    codes = np.asarray(w.codes, dtype="<u2")
+    bits = np.unpackbits(np.asarray(w.sign_bytes, dtype=np.uint8),
+                         bitorder="little", count=n).astype(bool)
+    d = np.float32(CODE_MAX) - codes.astype(np.float32)
+    mag = np.exp2(np.float32(np.asarray(w.l_max).reshape(()))
+                  - d * np.float32(step)).astype(np.float32)
+    mag[codes == 0] = 0.0
+    return np.where(bits, -mag, mag).astype(np.float32)
+
+
+def wire_to_segments(pair: tuple[PlaneWire, PlaneWire], n: int,
+                     prescan: bool = True,
+                     params: PwRelParams | None = None) -> BlockSegments:
+    """Host lossless stage: fetched wire arrays -> structured block segments.
+
+    When ``params`` is given, the host codec's never-inflate contract is
+    honored: if the pwrel segments would exceed the raw block, the wire is
+    dequantized on the host (pure numpy — the quantized data is all the
+    device shipped, so the RAW bytes hold the reconstruction, not the
+    pre-quantization amplitudes the host encoder would have stored).
+    """
+    seg = BlockSegments(n_amps=n, prescan=prescan,
+                        re=_wire_plane_to_segments(pair[0], n, prescan),
+                        im=_wire_plane_to_segments(pair[1], n, prescan))
+    if params is not None and seg.nbytes >= seg.raw_nbytes + 8:
+        step = log_step(params.b_r)
+        amps = (_wire_plane_to_f32(pair[0], n, step)
+                + 1j * _wire_plane_to_f32(pair[1], n, step)) \
+            .astype(np.complex64)
+        seg = BlockSegments(n_amps=n, raw=amps.tobytes())
+    return seg
+
+
+# --------------------------------------------------------------------------
+# decode: host lossless stage -> wire -> device kernels
+# --------------------------------------------------------------------------
+
+def _segments_plane_to_wire(p: PlaneSegments, n: int,
+                            prescan: bool) -> PlaneWire:
+    u16 = np.asarray(decode_codes(p.codes, n))
+    bits = decode_bitmap(p.bitmap, n, prescan)
+    sign_bytes = np.packbits(bits, bitorder="little")
+    want = sign_wire_bytes(n)
+    if sign_bytes.size < want:
+        sign_bytes = np.concatenate(
+            [sign_bytes, np.zeros(want - sign_bytes.size, np.uint8)])
+    l_max = np.asarray(p.l_max, dtype=np.float32).reshape(1, 1)
+    return PlaneWire(u16, sign_bytes, l_max)
+
+
+def segments_to_wire(seg: BlockSegments) -> tuple[PlaneWire, PlaneWire]:
+    """Inflate a block's lossless segments to host wire arrays (GIL-free)."""
+    assert not seg.is_raw, "RAW blocks bypass the device codec"
+    return (_segments_plane_to_wire(seg.re, seg.n_amps, seg.prescan),
+            _segments_plane_to_wire(seg.im, seg.n_amps, seg.prescan))
+
+
+def _decode_plane_dev(codes_u16: jax.Array, sign_bytes: jax.Array,
+                      l_max: jax.Array, n: int, step: float,
+                      interpret: bool) -> jax.Array:
+    rows, pad = plane_geometry(n)
+    if pad:
+        codes_u16 = jnp.concatenate(
+            [codes_u16, jnp.zeros((pad,), jnp.uint16)])
+    packed_codes = lax.bitcast_convert_type(
+        codes_u16.reshape(rows * (_LANES // 2), 2),
+        jnp.int32).reshape(rows, _LANES // 2)
+    spad = rows * 16 - sign_bytes.shape[0]
+    if spad:
+        sign_bytes = jnp.concatenate(
+            [sign_bytes, jnp.zeros((spad,), jnp.uint8)])
+    packed_signs = lax.bitcast_convert_type(
+        sign_bytes.reshape(rows, 4, 4), jnp.int32)
+    codes = _pk.unpack_codes_tiles(packed_codes, interpret=interpret)
+    plane = _qz.dequantize_tiles(codes, packed_signs, l_max, step,
+                                 interpret=interpret)
+    return plane.reshape(-1)[:n]
+
+
+@partial(jax.jit, static_argnames=("n", "step", "interpret"))
+def _decode_blocks_jit(codes, sign_bytes, l_max, n: int, step: float,
+                       interpret: bool):
+    """codes (2k, n) u16 / sign_bytes (2k, s) u8 / l_max (2k, 1, 1) f32,
+    planes in block order [re0, im0, re1, im1, ...] -> (k, n) complex64."""
+    k2 = codes.shape[0]
+    planes = [_decode_plane_dev(codes[i], sign_bytes[i], l_max[i], n, step,
+                                interpret) for i in range(k2)]
+    return jnp.stack([planes[2 * j] + 1j * planes[2 * j + 1]
+                      for j in range(k2 // 2)]).astype(jnp.complex64)
+
+
+def decode_blocks_device(pairs: list, n: int, params: PwRelParams, device,
+                         *, interpret: bool = True) -> tuple[jax.Array, int]:
+    """Ship several blocks' wire arrays to ``device`` in three batched
+    transfers and decode them in one kernel dispatch.
+
+    Args:
+        pairs: per-block ``(re, im)`` host :class:`PlaneWire` tuples.
+
+    Returns (device complex64 blocks (len(pairs), n), bytes moved h2d).
+    The decode is dispatched asynchronously — callers can overlap it with
+    compute of the previous group (§4.2).
+    """
+    planes = [w for pair in pairs for w in pair]
+    codes = np.stack([np.asarray(w.codes) for w in planes])
+    sign_bytes = np.stack([np.asarray(w.sign_bytes) for w in planes])
+    l_max = np.stack([np.asarray(w.l_max) for w in planes])
+    moved = codes.nbytes + sign_bytes.nbytes + l_max.nbytes
+    blocks = _decode_blocks_jit(
+        jax.device_put(codes, device), jax.device_put(sign_bytes, device),
+        jax.device_put(l_max, device), n=n, step=log_step(params.b_r),
+        interpret=interpret)
+    return blocks, moved
+
+
+def decode_block_device(pair: tuple[PlaneWire, PlaneWire], n: int,
+                        params: PwRelParams, device,
+                        *, interpret: bool = True) -> tuple[jax.Array, int]:
+    """Single-block convenience over :func:`decode_blocks_device`."""
+    blocks, moved = decode_blocks_device([pair], n, params, device,
+                                         interpret=interpret)
+    return blocks[0], moved

@@ -11,6 +11,11 @@ Extras matching the paper:
 * ``put_alias`` — the §4.2 initialization trick: all-zero blocks are stored
   once and aliased (refcounted), so initial compression is O(1) not O(2^c).
 * peak statistics for the memory benchmarks (Fig. 9).
+* structured blocks — ``put_block`` / ``get_block`` store a
+  :class:`~repro.compression.segments.BlockSegments` *as an object* in the
+  RAM tier (no serialize/parse on the hot path; the pipeline reaches its
+  ``codes`` / ``bitmap`` / ``l_max`` segments directly) and serialize it
+  only when it spills to disk.
 
 Keys map to refcounted internal blobs, so overwriting a key never disturbs
 other keys aliased to the same blob.
@@ -20,7 +25,10 @@ from __future__ import annotations
 import itertools
 import os
 import tempfile
+import threading
 from dataclasses import dataclass
+
+from .segments import BlockSegments
 
 
 @dataclass
@@ -40,8 +48,22 @@ class StoreStats:
                                     self.ram_bytes + self.disk_bytes)
 
 
+def _blob_nbytes(blob) -> int:
+    return len(blob) if isinstance(blob, (bytes, bytearray)) else blob.nbytes
+
+
+def _blob_bytes(blob) -> bytes:
+    return blob if isinstance(blob, (bytes, bytearray)) else blob.to_bytes()
+
+
 class BlockStore:
-    """Key -> bytes store with a RAM budget and a disk spill tier."""
+    """Key -> block store with a RAM budget and a disk spill tier.
+
+    Values are either opaque ``bytes`` (``put`` / ``get``) or structured
+    :class:`BlockSegments` (``put_block`` / ``get_block``); the two views
+    are interchangeable — a spilled structured block deserializes on read,
+    and ``get_block`` on a byte blob parses the self-describing layout.
+    """
 
     def __init__(self, ram_budget_bytes: int | None = None,
                  spill_dir: str | None = None):
@@ -53,7 +75,8 @@ class BlockStore:
         self._ids = itertools.count()
         self._spill_dir = spill_dir
         self._tmp: tempfile.TemporaryDirectory | None = None
-        self.stats = StoreStats()
+        self._lock = threading.RLock()   # pipeline pools hit the store
+        self.stats = StoreStats()        # from both sides concurrently
 
     # -- tier plumbing ---------------------------------------------------------
     def _spill_path(self, blob_id: int) -> str:
@@ -68,21 +91,29 @@ class BlockStore:
             return True
         return self.stats.ram_bytes + nbytes <= self.ram_budget
 
-    def _store_blob(self, blob: bytes) -> int:
-        bid = next(self._ids)
-        self._refs[bid] = 0
-        if self._fits_ram(len(blob)):
-            self._ram[bid] = blob
-            self.stats.ram_bytes += len(blob)
-        else:
+    def _put(self, key: int, blob) -> None:
+        """Bind ``key`` to a fresh blob; disk writes happen outside the
+        lock (the new blob id is invisible to readers until ``_bind``)."""
+        nbytes = _blob_nbytes(blob)
+        with self._lock:
+            self.stats.puts += 1
+            bid = next(self._ids)
+            self._refs[bid] = 0
+            if self._fits_ram(nbytes):
+                self._ram[bid] = blob
+                self.stats.ram_bytes += nbytes
+                self.stats.observe()
+                self._bind(key, bid)
+                return
             path = self._spill_path(bid)
-            with open(path, "wb") as f:
-                f.write(blob)
+        with open(path, "wb") as f:
+            f.write(_blob_bytes(blob))
+        with self._lock:
             self._disk[bid] = path
-            self.stats.disk_bytes += len(blob)
+            self.stats.disk_bytes += nbytes
             self.stats.n_spills += 1
-        self.stats.observe()
-        return bid
+            self.stats.observe()
+            self._bind(key, bid)
 
     def _release_blob(self, bid: int) -> None:
         self._refs[bid] -= 1
@@ -90,7 +121,7 @@ class BlockStore:
             return
         del self._refs[bid]
         if bid in self._ram:
-            self.stats.ram_bytes -= len(self._ram.pop(bid))
+            self.stats.ram_bytes -= _blob_nbytes(self._ram.pop(bid))
         else:
             path = self._disk.pop(bid)
             self.stats.disk_bytes -= os.path.getsize(path)
@@ -105,35 +136,72 @@ class BlockStore:
 
     # -- public API ------------------------------------------------------------
     def put(self, key: int, blob: bytes) -> None:
-        self.stats.puts += 1
-        self._bind(key, self._store_blob(blob))
+        """Store opaque bytes under ``key`` (raw/uncompressed block path)."""
+        self._put(key, blob)
+
+    def put_block(self, key: int, seg: BlockSegments) -> None:
+        """Store a structured compressed block under ``key``.
+
+        The RAM tier keeps the :class:`BlockSegments` object itself;
+        serialization happens only if the block spills to disk.
+        """
+        self._put(key, seg)
 
     def put_alias(self, key: int, existing_key: int) -> None:
         """Point ``key`` at the blob of ``existing_key`` (zero-copy)."""
-        self._bind(key, self._key2blob[existing_key])
+        with self._lock:
+            self._bind(key, self._key2blob[existing_key])
+
+    def _fetch(self, key: int):
+        with self._lock:
+            self.stats.gets += 1
+            bid = self._key2blob[key]
+            blob = self._ram.get(bid)
+            if blob is not None:
+                return blob
+            self.stats.n_disk_reads += 1
+            path = self._disk[bid]
+        try:
+            # disk read outside the lock so concurrent workers overlap I/O
+            with open(path, "rb") as f:
+                return f.read()
+        except FileNotFoundError:
+            # the key was rebound and its old blob released mid-read —
+            # retry under the lock for a consistent snapshot
+            with self._lock:
+                bid = self._key2blob[key]
+                blob = self._ram.get(bid)
+                if blob is not None:
+                    return blob
+                with open(self._disk[bid], "rb") as f:
+                    return f.read()
 
     def get(self, key: int) -> bytes:
-        self.stats.gets += 1
-        bid = self._key2blob[key]
-        if bid in self._ram:
-            return self._ram[bid]
-        self.stats.n_disk_reads += 1
-        with open(self._disk[bid], "rb") as f:
-            return f.read()
+        """Fetch ``key`` as flat bytes (serializing a structured block)."""
+        return _blob_bytes(self._fetch(key))
+
+    def get_block(self, key: int) -> BlockSegments:
+        """Fetch ``key`` as structured segments (parsing a byte blob)."""
+        blob = self._fetch(key)
+        if isinstance(blob, BlockSegments):
+            return blob
+        return BlockSegments.from_bytes(blob)
 
     def __contains__(self, key: int) -> bool:
         return key in self._key2blob
 
     def nbytes_of(self, key: int) -> int:
-        bid = self._key2blob[key]
-        if bid in self._ram:
-            return len(self._ram[bid])
-        return os.path.getsize(self._disk[bid])
+        with self._lock:
+            bid = self._key2blob[key]
+            if bid in self._ram:
+                return _blob_nbytes(self._ram[bid])
+            return os.path.getsize(self._disk[bid])
 
     def delete(self, key: int) -> None:
-        bid = self._key2blob.pop(key, None)
-        if bid is not None:
-            self._release_blob(bid)
+        with self._lock:
+            bid = self._key2blob.pop(key, None)
+            if bid is not None:
+                self._release_blob(bid)
 
     @property
     def total_bytes(self) -> int:

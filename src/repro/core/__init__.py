@@ -9,4 +9,8 @@ from .fusion import FusedGate, fuse_gates, gates_to_unitary  # noqa: F401
 from .groups import GroupLayout, expand_bits  # noqa: F401
 from .library import CIRCUIT_BUILDERS, build_circuit, random_circuit  # noqa: F401
 from .partition import Partition, Stage, partition_circuit  # noqa: F401
+from .pipeline import (  # noqa: F401
+    CodecBackend, DeviceCodecBackend, HostCodecBackend, StagePipeline,
+    make_backend,
+)
 from .measure import block_probabilities, expect_diagonal, sample_counts  # noqa: F401

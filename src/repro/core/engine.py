@@ -3,20 +3,23 @@
 Execution model per stage (from the §4.1 partition):
 
     for each SV group (independent):            # parallel across devices
-        decompress 2^m member blocks -> flat 2^(b+m) group array   (host)
-        apply the stage's fused unitaries                          (device)
-        recompress the 2^m blocks -> two-level store               (host)
+        load/decode  2^m member blocks -> flat 2^(b+m) group array
+        compute      the stage's fused unitaries              (device)
+        encode/store the 2^m blocks -> two-level store
 
-The decompress/compute/compress phases of *different* groups overlap via a
-thread pipeline (§4.2's transfer-concealed workflow — zlib/numpy release
-the GIL, JAX dispatch is async, so the overlap is real on this host too).
+Phase orchestration lives in :mod:`repro.core.pipeline`: host phases of
+*different* groups overlap through worker threads (§4.2's
+transfer-concealed workflow — zlib/numpy release the GIL, JAX dispatch is
+async), and ``EngineConfig.codec_backend`` chooses where the lossy codec
+runs — ``"host"`` (baseline: raw group arrays cross the host↔device
+boundary) or ``"device"`` (§4.3: the Pallas quantize/pack kernels run next
+to the compute and only the compressed wire representation crosses).
 Groups never communicate: multi-device execution (§4.2 multi-GPU) is plain
 round-robin group placement with zero collectives.
 """
 from __future__ import annotations
 
 import time
-from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from functools import lru_cache
 
@@ -24,39 +27,75 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..compression.codec import (
-    CompressedBlock, compress_complex_block, decompress_complex_block,
-)
 from ..compression.pwrel import PwRelParams
 from ..compression.store import BlockStore
+from ..kernels.ops import default_interpret
 from .circuit import Circuit
 from .dense_engine import apply_matrix
 from .fusion import FusedGate, fuse_gates
 from .groups import GroupLayout
 from .partition import Partition, partition_circuit
+from .pipeline import StagePipeline, make_backend
 
 __all__ = ["EngineConfig", "SimStats", "BMQSimEngine", "simulate_bmqsim"]
 
 
 @dataclass
 class EngineConfig:
-    local_bits: int                  # b: SV block = 2^b amplitudes
-    inner_size: int = 2              # max inner global indices per stage
-    b_r: float = 1e-3                # point-wise relative bound (paper default)
-    max_fused_qubits: int = 5        # fusion width (7 => 128x128 MXU tiles on TPU)
-    compression: bool = True         # False = raw blocks (Fig. 11 baseline)
-    prescan: bool = True             # bitmap pre-scan RLE (§4.3)
-    pipeline_depth: int = 2          # decompress-ahead / compress-behind workers
+    """Knobs of one BMQSIM run (paper defaults unless noted).
+
+    Attributes:
+        local_bits: ``b`` — an SV block holds 2^b amplitudes; the state
+            splits into 2^(n-b) blocks (§3).
+        inner_size: max inner global indices per stage — Algorithm 1's
+            threshold; a group is 2^inner_size blocks.
+        b_r: point-wise relative error bound of the lossy quantizer (§4.3).
+        max_fused_qubits: gate-fusion width (7 => 128x128 MXU tiles on TPU).
+        compression: False stores raw complex64 blocks (Fig. 11 baseline).
+        prescan: bitmap pre-scan RLE in the lossless stage (§4.3).
+        pipeline_depth: decode-ahead / encode-behind worker count (§4.2;
+            the paper's CUDA stream count).
+        codec_backend: ``"host"`` runs the whole codec on the host and
+            moves raw 2^(b+m) complex64 group arrays across the
+            host↔device boundary; ``"device"`` runs quantize/dequantize +
+            bitmap/code packing on the accelerator (Pallas kernels,
+            interpret-mode on CPU) so only packed codes + sign bitmaps +
+            scalars cross.  ``"device"`` requires ``compression=True``
+            (silently falls back to host otherwise).
+        ram_budget_bytes: primary-tier budget of the two-level store (§4.4);
+            overflow spills to disk.
+        spill_dir: secondary-tier directory (default: a temp dir).
+        use_kernel: apply gates via the Pallas gate kernels instead of XLA.
+        devices: round-robin group placement targets (default: device 0).
+        per_gate: SC19-Sim baseline — one stage per gate, i.e. a full
+            decompress+recompress sweep per gate (§3).
+    """
+
+    local_bits: int
+    inner_size: int = 2
+    b_r: float = 1e-3
+    max_fused_qubits: int = 5
+    compression: bool = True
+    prescan: bool = True
+    pipeline_depth: int = 2
+    codec_backend: str = "host"
     ram_budget_bytes: int | None = None
     spill_dir: str | None = None
-    use_kernel: bool = False         # Pallas gate_apply path (interpret on CPU)
-    devices: list | None = None      # round-robin group placement targets
-    per_gate: bool = False           # SC19-Sim baseline: one stage per gate
-                                     # (decompress+recompress per gate, §3)
+    use_kernel: bool = False
+    devices: list | None = None
+    per_gate: bool = False
 
 
 @dataclass
 class SimStats:
+    """Counters and timings of one run (see the paper's Figs. 9-12).
+
+    ``h2d_bytes`` / ``d2h_bytes`` count every byte that crossed the
+    host↔device boundary through the stage pipeline — the quantity the
+    device codec backend shrinks; ``per_stage_boundary_bytes`` records the
+    per-stage (h2d, d2h) pairs for the boundary-traffic benchmarks.
+    """
+
     n_qubits: int = 0
     n_gates: int = 0
     n_stages: int = 0
@@ -67,6 +106,9 @@ class SimStats:
     peak_total_bytes: int = 0
     disk_bytes: int = 0
     n_spills: int = 0
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
+    per_stage_boundary_bytes: list = field(default_factory=list)
     t_decompress: float = 0.0
     t_compute: float = 0.0
     t_compress: float = 0.0
@@ -85,6 +127,11 @@ class SimStats:
     @property
     def memory_reduction(self) -> float:
         return self.standard_bytes / max(1, self.peak_total_bytes)
+
+    @property
+    def boundary_bytes(self) -> int:
+        """Total host↔device traffic (both directions)."""
+        return self.h2d_bytes + self.d2h_bytes
 
 
 # --------------------------------------------------------------------------
@@ -114,7 +161,9 @@ def _apply_fused(amps: jax.Array, mats: tuple[jax.Array, ...],
 def _stage_fn(plan: tuple[tuple[tuple[int, ...], bool], ...], nv: int,
               use_kernel: bool):
     """Jitted group-update function, cached on the stage *structure* so
-    stages with identical access patterns share one compilation."""
+    stages with identical access patterns share one compilation.  The
+    group buffer is donated: the decoded input array is dead once the
+    stage's unitaries consume it, so XLA may update in place."""
     if use_kernel:
         from ..kernels import ops as kops
 
@@ -125,10 +174,17 @@ def _stage_fn(plan: tuple[tuple[tuple[int, ...], bool], ...], nv: int,
     else:
         def fn(amps, *mats):
             return _apply_fused(amps, mats, plan, nv)
-    return jax.jit(fn)
+    return jax.jit(fn, donate_argnums=0)
 
 
 class BMQSimEngine:
+    """One simulation run: partition, then pipeline every stage (§4).
+
+    Construction performs the §4.1 partition and gate fusion; :meth:`run`
+    executes the staged pipeline.  Use :func:`simulate_bmqsim` unless you
+    need to poke at engine internals between construction and run.
+    """
+
     def __init__(self, circuit: Circuit, config: EngineConfig):
         self.circuit = circuit
         self.cfg = config
@@ -138,6 +194,10 @@ class BMQSimEngine:
         self.store = BlockStore(ram_budget_bytes=config.ram_budget_bytes,
                                 spill_dir=config.spill_dir)
         self.stats = SimStats(n_qubits=self.n, n_gates=len(circuit))
+        self.backend = make_backend(
+            config.codec_backend, self.store, self.params, 2 ** self.b,
+            compression=config.compression, prescan=config.prescan,
+            interpret=default_interpret())
 
         t0 = time.perf_counter()
         if config.per_gate:
@@ -167,51 +227,62 @@ class BMQSimEngine:
 
         self._devices = config.devices or [jax.devices()[0]]
 
-    # -- block codec (compression toggle) -----------------------------------
-    def _compress(self, amps: np.ndarray) -> bytes:
-        if not self.cfg.compression:
-            return np.asarray(amps, dtype=np.complex64).tobytes()
-        return compress_complex_block(amps, self.params,
-                                      prescan=self.cfg.prescan).payload
-
-    def _decompress(self, blob: bytes) -> np.ndarray:
-        if not self.cfg.compression:
-            return np.frombuffer(blob, dtype=np.complex64)
-        return decompress_complex_block(blob, self.params)
-
     # -- initialization (§4.2 trick) -----------------------------------------
     def _init_state(self) -> None:
         bsz = 2 ** self.b
         first = np.zeros(bsz, dtype=np.complex64)
         first[0] = 1.0
-        self.store.put(0, self._compress(first))
+        self.backend.encode_host_block(0, first)
         n_blocks = 2 ** (self.n - self.b)
         if n_blocks > 1:
-            zero = np.zeros(bsz, dtype=np.complex64)
-            self.store.put(1, self._compress(zero))
+            self.backend.encode_host_block(1, np.zeros(bsz, np.complex64))
             for blk in range(2, n_blocks):
                 self.store.put_alias(blk, 1)
         self.stats.n_block_compressions += min(n_blocks, 2)
 
     # -- main loop -------------------------------------------------------------
     def run(self, collect_state: bool = True) -> np.ndarray | None:
+        """Execute the circuit through the staged pipeline.
+
+        Args:
+            collect_state: decompress and return the final 2^n state
+                (set False for memory benchmarks at large n).
+
+        Returns:
+            The final complex64 state vector, or None.
+        """
         t_start = time.perf_counter()
         self._init_state()
-        n_workers = max(1, self.cfg.pipeline_depth)
-        with ThreadPoolExecutor(max_workers=n_workers) as dec_pool, \
-                ThreadPoolExecutor(max_workers=n_workers) as com_pool:
+        pipe = StagePipeline(self.backend, depth=self.cfg.pipeline_depth,
+                             devices=self._devices)
+        # snapshot the backend's lifetime counters so repeated run() calls
+        # on one engine accumulate deltas, not running totals
+        back = self.backend
+        h2d0, d2h0 = back.h2d_bytes, back.d2h_bytes
+        dec0, com0 = back.n_decompressions, back.n_compressions
+        with pipe:
             for layout, vgates in self._stages:
-                if vgates:
-                    self._run_stage(layout, vgates, dec_pool, com_pool)
+                if not vgates:
+                    continue
+                sh2d, sd2h = back.h2d_bytes, back.d2h_bytes
+                self._run_stage(pipe, layout, vgates)
+                self.stats.per_stage_boundary_bytes.append(
+                    (back.h2d_bytes - sh2d, back.d2h_bytes - sd2h))
+        self.stats.t_decompress += pipe.t_load
+        self.stats.t_compute += pipe.t_compute
+        self.stats.t_compress += pipe.t_store
+        self.stats.h2d_bytes += back.h2d_bytes - h2d0
+        self.stats.d2h_bytes += back.d2h_bytes - d2h0
+        self.stats.n_block_decompressions += back.n_decompressions - dec0
+        self.stats.n_block_compressions += back.n_compressions - com0
         self.stats.t_total = time.perf_counter() - t_start
         self._snap_store_stats()
         if collect_state:
             return self._collect()
         return None
 
-    def _run_stage(self, layout: GroupLayout, vgates: list[FusedGate],
-                   dec_pool: ThreadPoolExecutor,
-                   com_pool: ThreadPoolExecutor) -> None:
+    def _run_stage(self, pipe: StagePipeline, layout: GroupLayout,
+                   vgates: list[FusedGate]) -> None:
         nv = layout.b + layout.m
         plan = tuple((fg.qubits, fg.is_diagonal) for fg in vgates)
         fn = _stage_fn(plan, nv, self.cfg.use_kernel)
@@ -220,50 +291,7 @@ class BMQSimEngine:
                         dtype=jnp.complex64)
             for fg, (_, diag) in zip(vgates, plan)
         ]
-
-        block_ids = layout.group_block_ids()      # (G, 2^m)
-        n_groups = layout.n_groups
-        bsz = 2 ** layout.b
-
-        def load_group(g: int) -> np.ndarray:
-            t0 = time.perf_counter()
-            parts = [self._decompress(self.store.get(int(bid)))
-                     for bid in block_ids[g]]
-            self.stats.n_block_decompressions += len(parts)
-            out = np.concatenate(parts) if len(parts) > 1 else parts[0]
-            self.stats.t_decompress += time.perf_counter() - t0
-            return out
-
-        def save_group(g: int, amps: np.ndarray) -> None:
-            t0 = time.perf_counter()
-            blocks = np.asarray(amps).reshape(layout.blocks_per_group, bsz)
-            for i, bid in enumerate(block_ids[g]):
-                self.store.put(int(bid), self._compress(blocks[i]))
-            self.stats.n_block_compressions += layout.blocks_per_group
-            self.stats.t_compress += time.perf_counter() - t0
-
-        depth = max(1, self.cfg.pipeline_depth)
-        devices = self._devices
-        pending_load = {}
-        pending_save = []
-        for g in range(min(depth, n_groups)):
-            pending_load[g] = dec_pool.submit(load_group, g)
-
-        for g in range(n_groups):
-            amps = pending_load.pop(g).result()
-            nxt = g + depth
-            if nxt < n_groups:
-                pending_load[nxt] = dec_pool.submit(load_group, nxt)
-            t0 = time.perf_counter()
-            dev = devices[g % len(devices)]
-            amps_dev = jax.device_put(jnp.asarray(amps), dev)
-            out = fn(amps_dev, *mats)
-            out_np = np.asarray(out)          # blocks until device finishes
-            self.stats.t_compute += time.perf_counter() - t0
-            pending_save.append(com_pool.submit(save_group, g, out_np))
-
-        for fut in pending_save:               # stage barrier (§4.1 semantics)
-            fut.result()
+        pipe.run_stage(layout.group_block_ids(), fn, mats)
 
     def _snap_store_stats(self) -> None:
         s = self.store.stats
@@ -274,7 +302,7 @@ class BMQSimEngine:
 
     def _collect(self) -> np.ndarray:
         n_blocks = 2 ** (self.n - self.b)
-        parts = [self._decompress(self.store.get(blk))
+        parts = [self.backend.decode_host_block(blk)
                  for blk in range(n_blocks)]
         return np.concatenate(parts)
 
@@ -284,7 +312,17 @@ class BMQSimEngine:
 
 def simulate_bmqsim(circuit: Circuit, config: EngineConfig,
                     collect_state: bool = True):
-    """Convenience wrapper: run and return (state, stats)."""
+    """Simulate ``circuit`` with the compressed staged engine.
+
+    Args:
+        circuit: the :class:`~repro.core.circuit.Circuit` to run.
+        config: engine knobs; see :class:`EngineConfig`.
+        collect_state: return the final state (False to keep only stats).
+
+    Returns:
+        ``(state, stats)`` — the final complex64 state vector (or None)
+        and the run's :class:`SimStats`.
+    """
     eng = BMQSimEngine(circuit, config)
     try:
         state = eng.run(collect_state=collect_state)

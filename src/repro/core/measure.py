@@ -27,7 +27,7 @@ def block_probabilities(engine: BMQSimEngine) -> np.ndarray:
     n_blocks = 2 ** (engine.n - engine.b)
     masses = np.empty(n_blocks, np.float64)
     for blk in range(n_blocks):
-        amps = engine._decompress(engine.store.get(blk))
+        amps = engine.backend.decode_host_block(blk)
         masses[blk] = float(np.sum(np.abs(amps) ** 2))
     return masses
 
@@ -46,7 +46,7 @@ def sample_counts(engine: BMQSimEngine, n_shots: int,
     counts: dict[int, int] = {}
     bsz = 2 ** engine.b
     for blk in np.nonzero(per_block)[0]:
-        amps = engine._decompress(engine.store.get(int(blk)))
+        amps = engine.backend.decode_host_block(int(blk))
         p = np.abs(amps) ** 2
         p = p / p.sum()
         idx = rng.choice(bsz, size=int(per_block[blk]), p=p)
@@ -68,7 +68,7 @@ def expect_diagonal(engine: BMQSimEngine, diag_fn) -> float:
     local = np.arange(bsz, dtype=np.int64)
     acc = 0.0
     for blk in range(n_blocks):
-        amps = engine._decompress(engine.store.get(blk))
+        amps = engine.backend.decode_host_block(blk)
         vals = diag_fn((blk << engine.b) | local)
         acc += float(np.sum((np.abs(amps) ** 2) * vals))
     return acc

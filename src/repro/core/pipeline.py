@@ -1,0 +1,334 @@
+"""Stage pipeline: load/decode → compute → encode/store (paper §4.1/§4.2).
+
+One stage of the partitioned simulation processes every SV group through
+three phases:
+
+    1. load/decode   — fetch the group's 2^m blocks from the two-level
+                       store and produce the flat 2^(b+m) device array
+    2. compute       — apply the stage's fused unitaries on-device
+    3. encode/store  — compress the updated blocks back into the store
+
+:class:`StagePipeline` owns the phase orchestration — host phases run in
+worker thread pools (zlib/numpy release the GIL), device phases dispatch
+asynchronously so decode-of-group-g+1 overlaps compute-of-group-g (§4.2's
+transfer-concealed workflow) — while a :class:`CodecBackend` decides *where
+the codec runs*:
+
+``host``   (:class:`HostCodecBackend`)   — the correctness baseline: blocks
+    are fully decompressed on the host and the **raw** 2^(b+m) complex64
+    group array crosses the host↔device boundary (8 bytes/amplitude each
+    way).
+
+``device`` (:class:`DeviceCodecBackend`) — the paper's design: only the
+    **compressed wire representation** (packed uint16 codes + ballot sign
+    words + ``l_max`` scalars, ~4.25 bytes/amplitude) crosses the boundary;
+    the Pallas kernels quantize/dequantize next to the compute, and the
+    host keeps only the lossless zlib/prescan stage and the store.
+
+Both backends read and write the same stored :class:`BlockSegments`
+format, so they are interchangeable mid-simulation and verifiable against
+each other (tests/test_pipeline.py).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..compression.codec import decode_block_host, encode_block_host
+from ..compression.device_codec import (decode_blocks_device,
+                                        encode_group_device,
+                                        fetch_group_wire, segments_to_wire,
+                                        wire_to_segments)
+from ..compression.pwrel import PwRelParams
+from ..compression.store import BlockStore
+
+__all__ = ["CodecBackend", "HostCodecBackend", "DeviceCodecBackend",
+           "StagePipeline", "make_backend"]
+
+
+class CodecBackend:
+    """Where the block codec runs, as four phase hooks.
+
+    ``fetch_group`` / ``store_group`` are the *host* halves (called from
+    worker threads; GIL-friendly numpy/zlib only — they never touch JAX).
+    ``stage_to_device`` / ``fetch_result`` are the *device* halves (called
+    from the dispatch thread); ``stage_to_device`` only dispatches — it
+    never blocks — so the pipeline can overlap it with compute.
+
+    Byte counters ``h2d_bytes`` / ``d2h_bytes`` accumulate the size of
+    every array that crosses the host↔device boundary — the quantity the
+    device-resident codec exists to shrink.
+
+    Args:
+        store: the two-level block store.
+        params: pwrel bound shared by both codec halves.
+        bsz: amplitudes per SV block (2^b, engine-constant).
+        compression: False = raw complex64 blocks (Fig. 11 baseline).
+        prescan: bitmap pre-scan RLE in the lossless stage (§4.3).
+    """
+
+    name: str = "abstract"
+
+    def __init__(self, store: BlockStore, params: PwRelParams, bsz: int,
+                 compression: bool = True, prescan: bool = True):
+        self.store = store
+        self.params = params
+        self.bsz = bsz
+        self.compression = compression
+        self.prescan = prescan
+        self.h2d_bytes = 0
+        self.d2h_bytes = 0
+        self.n_decompressions = 0
+        self.n_compressions = 0
+        # host-phase hooks run in concurrent worker threads; counter
+        # updates are read-modify-write and need the lock
+        self._count_lock = threading.Lock()
+
+    def add_counts(self, decompressions: int = 0,
+                   compressions: int = 0) -> None:
+        with self._count_lock:
+            self.n_decompressions += decompressions
+            self.n_compressions += compressions
+
+    # -- host block codec (also used for init/collect outside the pipeline) --
+    def encode_host_block(self, key: int, amps: np.ndarray) -> None:
+        """Compress one np block on the host and store it under ``key``."""
+        if not self.compression:
+            self.store.put(key, np.asarray(amps, np.complex64).tobytes())
+        else:
+            self.store.put_block(
+                key, encode_block_host(amps, self.params,
+                                       prescan=self.prescan))
+
+    def decode_host_block(self, key: int) -> np.ndarray:
+        """Fetch the block under ``key`` and decompress it on the host."""
+        if not self.compression:
+            return np.frombuffer(self.store.get(key), dtype=np.complex64)
+        return decode_block_host(self.store.get_block(key), self.params)
+
+    # -- phase hooks ---------------------------------------------------------
+    def fetch_group(self, block_ids: np.ndarray):
+        """Worker thread: store -> host staging object for one group."""
+        raise NotImplementedError
+
+    def stage_to_device(self, staged, device) -> jax.Array:
+        """Dispatch thread: host staging -> flat device group array (async)."""
+        raise NotImplementedError
+
+    def fetch_result(self, amps_dev: jax.Array, n_blocks: int):
+        """Dispatch thread: device result -> host result object (blocks)."""
+        raise NotImplementedError
+
+    def store_group(self, block_ids: np.ndarray, result) -> None:
+        """Worker thread: host result object -> store."""
+        raise NotImplementedError
+
+
+class HostCodecBackend(CodecBackend):
+    """Baseline: the full codec runs on the host (seed engine behavior).
+
+    Raw 2^(b+m) complex64 group arrays cross the host↔device boundary in
+    both directions.  Also the only backend usable with
+    ``compression=False``.
+    """
+
+    name = "host"
+
+    def fetch_group(self, block_ids):
+        parts = [self.decode_host_block(int(bid)) for bid in block_ids]
+        self.add_counts(decompressions=len(parts))
+        return np.concatenate(parts) if len(parts) > 1 else parts[0]
+
+    def stage_to_device(self, staged, device):
+        self.h2d_bytes += staged.nbytes
+        return jax.device_put(jnp.asarray(staged), device)
+
+    def fetch_result(self, amps_dev, n_blocks):
+        out = np.asarray(amps_dev)            # blocks until device finishes
+        self.d2h_bytes += out.nbytes
+        return out
+
+    def store_group(self, block_ids, result):
+        blocks = np.asarray(result).reshape(len(block_ids), self.bsz)
+        for i, bid in enumerate(block_ids):
+            self.encode_host_block(int(bid), blocks[i])
+        self.add_counts(compressions=len(block_ids))
+
+
+class DeviceCodecBackend(CodecBackend):
+    """Device-resident lossy codec: compressed wire crosses the boundary.
+
+    Requires ``compression=True`` (the raw-block toggle has no device
+    half — use :func:`make_backend`, which falls back to the host backend).
+    RAW-escape blocks (incompressible data) degrade gracefully to a raw
+    transfer for that block only.
+    """
+
+    name = "device"
+
+    def __init__(self, store, params, bsz, compression=True, prescan=True,
+                 *, interpret: bool = True):
+        assert compression, "device codec backend requires compression=True"
+        super().__init__(store, params, bsz, compression, prescan)
+        self.interpret = interpret
+
+    def fetch_group(self, block_ids):
+        staged = []
+        for bid in block_ids:
+            seg = self.store.get_block(int(bid))
+            if seg.is_raw:
+                staged.append(("raw", np.frombuffer(
+                    seg.raw, dtype=np.complex64, count=seg.n_amps)))
+            else:
+                staged.append(("wire", segments_to_wire(seg)))
+        self.add_counts(decompressions=len(staged))
+        return staged
+
+    def stage_to_device(self, staged, device):
+        parts: list = [None] * len(staged)
+        wire_idx = []
+        for i, (kind, payload) in enumerate(staged):
+            if kind == "raw":
+                self.h2d_bytes += payload.nbytes
+                parts[i] = jax.device_put(jnp.asarray(payload), device)
+            else:
+                wire_idx.append(i)
+        if wire_idx:
+            # batched: 3 transfers + 1 decode dispatch for the whole group
+            blocks, moved = decode_blocks_device(
+                [staged[i][1] for i in wire_idx], self.bsz, self.params,
+                device, interpret=self.interpret)
+            self.h2d_bytes += moved
+            for j, i in enumerate(wire_idx):
+                parts[i] = blocks[j]
+        return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+    def fetch_result(self, amps_dev, n_blocks):
+        encoded = encode_group_device(amps_dev, n_blocks, self.params,
+                                      interpret=self.interpret)
+        wire, moved = fetch_group_wire(encoded)   # blocks until done
+        self.d2h_bytes += moved
+        return wire
+
+    def store_group(self, block_ids, result):
+        for pair, bid in zip(result, block_ids):
+            self.store.put_block(
+                int(bid), wire_to_segments(pair, self.bsz,
+                                           prescan=self.prescan,
+                                           params=self.params))
+        self.add_counts(compressions=len(block_ids))
+
+
+def make_backend(name: str, store: BlockStore, params: PwRelParams,
+                 bsz: int, compression: bool = True, prescan: bool = True,
+                 *, interpret: bool = True) -> CodecBackend:
+    """Resolve an ``EngineConfig.codec_backend`` name to a backend.
+
+    ``"device"`` silently degrades to ``"host"`` when ``compression`` is
+    off — there is no device half to a raw byte copy.
+    """
+    if name == "device" and compression:
+        return DeviceCodecBackend(store, params, bsz, compression, prescan,
+                                  interpret=interpret)
+    if name in ("host", "device"):
+        return HostCodecBackend(store, params, bsz, compression, prescan)
+    raise ValueError(f"unknown codec backend {name!r} "
+                     "(expected 'host' or 'device')")
+
+
+class StagePipeline:
+    """Orchestrates the per-group load → compute → store loop of a stage.
+
+    ``depth`` groups are fetched ahead in the decode pool while compressed
+    writes drain through the store pool (§4.2's pipeline).  On the device
+    side, the decode of the next group is dispatched *before* the current
+    group's result is fetched, so it overlaps compute under JAX's async
+    dispatch.
+
+    Use as a context manager (owns the worker pools); call
+    :meth:`run_stage` once per partition stage, then read the counters off
+    ``backend`` and the ``t_*`` attributes.
+    """
+
+    def __init__(self, backend: CodecBackend, depth: int = 2,
+                 devices: list | None = None):
+        self.backend = backend
+        self.depth = max(1, depth)
+        self.devices = devices or [jax.devices()[0]]
+        self.t_load = 0.0
+        self.t_compute = 0.0
+        self.t_store = 0.0
+        self._t_lock = threading.Lock()  # _load/_store run concurrently
+        self._dec_pool: ThreadPoolExecutor | None = None
+        self._com_pool: ThreadPoolExecutor | None = None
+
+    def __enter__(self) -> "StagePipeline":
+        self._dec_pool = ThreadPoolExecutor(max_workers=self.depth)
+        self._com_pool = ThreadPoolExecutor(max_workers=self.depth)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._dec_pool.shutdown(wait=True)
+        self._com_pool.shutdown(wait=True)
+        self._dec_pool = self._com_pool = None
+
+    # -- timed phase wrappers (run inside worker threads) ---------------------
+    def _load(self, block_ids):
+        t0 = time.perf_counter()
+        staged = self.backend.fetch_group(block_ids)
+        dt = time.perf_counter() - t0
+        with self._t_lock:
+            self.t_load += dt
+        return staged
+
+    def _store(self, block_ids, result):
+        t0 = time.perf_counter()
+        self.backend.store_group(block_ids, result)
+        dt = time.perf_counter() - t0
+        with self._t_lock:
+            self.t_store += dt
+
+    def _device_for(self, g: int):
+        return self.devices[g % len(self.devices)]
+
+    def run_stage(self, block_ids: np.ndarray, fn, mats) -> None:
+        """Run one stage: ``block_ids`` is the (n_groups, 2^m) layout table,
+        ``fn`` the jitted group-update function, ``mats`` its operands."""
+        assert self._dec_pool is not None, "use StagePipeline as a context manager"
+        n_groups, n_blocks = block_ids.shape
+        pending_load = {
+            g: self._dec_pool.submit(self._load, block_ids[g])
+            for g in range(min(self.depth, n_groups))
+        }
+        staged_dev: dict[int, jax.Array] = {}
+        pending_save = []
+        for g in range(n_groups):
+            amps_dev = staged_dev.pop(g, None)
+            if amps_dev is None:
+                staged = pending_load.pop(g).result()
+                t0 = time.perf_counter()
+                amps_dev = self.backend.stage_to_device(
+                    staged, self._device_for(g))
+                self.t_compute += time.perf_counter() - t0
+            nxt = g + self.depth
+            if nxt < n_groups:
+                pending_load[nxt] = self._dec_pool.submit(
+                    self._load, block_ids[nxt])
+            t0 = time.perf_counter()
+            out = fn(amps_dev, *mats)                  # async dispatch
+            # overlap: dispatch the next group's decode behind the compute
+            nxt = g + 1
+            if nxt in pending_load and pending_load[nxt].done():
+                staged_dev[nxt] = self.backend.stage_to_device(
+                    pending_load.pop(nxt).result(), self._device_for(nxt))
+            result = self.backend.fetch_result(out, n_blocks)
+            self.t_compute += time.perf_counter() - t0
+            pending_save.append(
+                self._com_pool.submit(self._store, block_ids[g], result))
+        for fut in pending_save:               # stage barrier (§4.1 semantics)
+            fut.result()

@@ -24,14 +24,36 @@ from ..models.config import ModelConfig
 
 TP_AXIS = "model"
 
-__all__ = ["TP_AXIS", "dp_axes", "param_pspecs", "batch_pspecs",
-           "cache_pspecs", "named_shardings"]
+__all__ = ["TP_AXIS", "activate_mesh", "dp_axes", "param_pspecs",
+           "batch_pspecs", "cache_pspecs", "named_shardings"]
+
+
+def activate_mesh(mesh: Mesh):
+    """Context manager activating ``mesh``, across jax versions.
+
+    jax >= 0.6 spells it ``jax.set_mesh(mesh)``; on 0.4/0.5 the Mesh
+    object is itself the context manager.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
 
 
 def dp_axes(mesh: Mesh):
     """FSDP/DP axes present in the mesh ('pod' first when multi-pod)."""
     names = mesh.axis_names
     return tuple(a for a in ("pod", "data") if a in names)
+
+
+def _norm_axes(axes):
+    """Collapse a 1-tuple mesh-axis set to its element and () to None —
+    PartitionSpec equality distinguishes ('data',) from 'data'."""
+    if isinstance(axes, tuple):
+        if not axes:
+            return None
+        if len(axes) == 1:
+            return axes[0]
+    return axes
 
 
 def _path_names(path) -> list[str]:
@@ -99,7 +121,7 @@ def _base_spec(cfg: ModelConfig, names: list[str], name: str, fsdp, tp,
 
 def param_pspecs(cfg: ModelConfig, params_tree, mesh: Mesh):
     """PartitionSpec pytree mirroring ``params_tree`` (arrays or SDS)."""
-    fsdp = dp_axes(mesh)
+    fsdp = _norm_axes(dp_axes(mesh))
     tp = TP_AXIS if TP_AXIS in mesh.axis_names else None
 
     def spec_for(path, leaf):
@@ -135,7 +157,7 @@ def _dp_if_divisible(b: int, mesh: Mesh):
     size = 1
     for a in fsdp:
         size *= mesh.shape[a]
-    return fsdp if (b % size == 0 and b >= size) else None
+    return _norm_axes(fsdp) if (b % size == 0 and b >= size) else None
 
 
 def cache_pspecs(cfg: ModelConfig, cache_tree, mesh: Mesh, batch: int):

@@ -15,9 +15,12 @@ import numpy as np
 
 from ..compression.pwrel import log_step
 from . import gate_apply as _ga
+from . import pack as _pk
 from . import quantize as _qz
 
 __all__ = ["apply_fused_gate", "quantize_block", "dequantize_block",
+           "pack_codes", "unpack_codes",
+           "pack_sign_bitmap", "unpack_sign_bitmap",
            "default_interpret"]
 
 
@@ -109,3 +112,67 @@ def dequantize_block(codes: jax.Array, packed_signs: jax.Array,
                           jnp.asarray(l_max, jnp.float32), log_step(b_r),
                           interpret)
     return out.reshape(-1)
+
+
+# --------------------------------------------------------------------------
+# boundary packing (device wire format of the §4.3 codec)
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _pack_codes_jit(codes2d, interpret):
+    return _pk.pack_codes_tiles(codes2d, interpret=interpret)
+
+
+def pack_codes(codes: jax.Array, *, interpret: bool | None = None):
+    """codes (N,) in [0, 65535], N % 128 == 0 -> (N/128, 64) i32 u16-pair
+    words; a little-endian host view of the result is the row-major uint16
+    code stream."""
+    if interpret is None:
+        interpret = default_interpret()
+    codes = jnp.asarray(codes).astype(jnp.int32)
+    n = codes.shape[0]
+    assert n % 128 == 0, f"code stream size {n} not lane-aligned"
+    return _pack_codes_jit(codes.reshape(n // 128, 128), interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _unpack_codes_jit(packed, interpret):
+    return _pk.unpack_codes_tiles(packed, interpret=interpret)
+
+
+def unpack_codes(packed: jax.Array,
+                 *, interpret: bool | None = None) -> jax.Array:
+    """(rows, 64) i32 u16-pair words -> (rows*128,) i32 codes."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _unpack_codes_jit(packed, interpret).reshape(-1)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _pack_bitmap_jit(bits2d, interpret):
+    return _pk.pack_bitmap_tiles(bits2d, interpret=interpret)
+
+
+def pack_sign_bitmap(bits: jax.Array,
+                     *, interpret: bool | None = None) -> jax.Array:
+    """bits (N,) bool/int, N % 128 == 0 -> (N/128, 4) i32 ballot words
+    (LSB = lowest lane), matching the pack fused into ``quantize_block``."""
+    if interpret is None:
+        interpret = default_interpret()
+    bits = jnp.asarray(bits).astype(jnp.int32)
+    n = bits.shape[0]
+    assert n % 128 == 0, f"bitmap size {n} not lane-aligned"
+    return _pack_bitmap_jit(bits.reshape(n // 128, 128), interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _unpack_bitmap_jit(packed, interpret):
+    return _pk.unpack_bitmap_tiles(packed, interpret=interpret)
+
+
+def unpack_sign_bitmap(packed: jax.Array,
+                       *, interpret: bool | None = None) -> jax.Array:
+    """(rows, 4) i32 ballot words -> (rows*128,) bool signs."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _unpack_bitmap_jit(packed, interpret).reshape(-1) == 1

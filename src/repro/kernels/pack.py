@@ -1,0 +1,139 @@
+"""Pallas kernels: uint16 code packing and sign-bitmap pack/unpack.
+
+These are the boundary-compression kernels of the device-resident codec
+(paper §4.3): after ``quantize.py`` produces int32 codes and ballot-packed
+sign words, these kernels shrink what actually crosses the host↔device
+boundary —
+
+* ``pack_codes_tiles``    — two uint16 codes per int32 word (lane pairs), so
+  a little-endian host view of the words is exactly the row-major uint16
+  code stream the lossless stage zlib-encodes.  2 bytes/element on the wire
+  instead of 4.
+* ``unpack_codes_tiles``  — the inverse, run before ``dequantize_tiles``.
+* ``pack_bitmap_tiles`` / ``unpack_bitmap_tiles`` — standalone ballot-style
+  sign packing (32 lanes -> one int32 word, LSB = lowest lane), the TPU
+  analogue of the paper's warp-ballot bitmap build.  1 bit/element on the
+  wire.  ``quantize_tiles`` fuses this pack into its kernel; the standalone
+  version exists for decode-side symmetry and for reuse outside the
+  quantizer.
+
+Lane-pair packing uses an in-register ``reshape(tr, 64, 2)``; interpret
+mode (this container) executes it exactly, and on hardware Mosaic lowers
+small trailing-dim reshapes via lane shuffles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "pack_codes_tiles", "unpack_codes_tiles",
+    "pack_bitmap_tiles", "unpack_bitmap_tiles",
+    "CODE_WORDS", "BITMAP_WORDS",
+]
+
+_LANES = 128
+CODE_WORDS = _LANES // 2       # int32 words per row of packed uint16 codes
+BITMAP_WORDS = _LANES // 32    # int32 words per row of packed sign bits
+
+
+def _tile_rows(rows: int, tile_rows: int) -> int:
+    tr = min(tile_rows, rows)
+    while rows % tr:
+        tr //= 2
+    return tr
+
+
+def _pack_codes_kernel(codes_ref, out_ref):
+    c = codes_ref[...]                       # (TR, 128) i32, values in u16 range
+    tr = c.shape[0]
+    pairs = c.reshape(tr, CODE_WORDS, 2)
+    out_ref[...] = (pairs[..., 0] | (pairs[..., 1] << 16)).astype(jnp.int32)
+
+
+def pack_codes_tiles(codes: jax.Array, *, tile_rows: int = 8,
+                     interpret: bool = True) -> jax.Array:
+    """codes (rows, 128) i32 in [0, 65535] -> (rows, 64) i32 u16-pair words."""
+    rows, lanes = codes.shape
+    assert lanes == _LANES, f"codes must be (rows, {_LANES}), got {codes.shape}"
+    tr = _tile_rows(rows, tile_rows)
+    return pl.pallas_call(
+        _pack_codes_kernel,
+        grid=(rows // tr,),
+        in_specs=[pl.BlockSpec((tr, _LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tr, CODE_WORDS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, CODE_WORDS), jnp.int32),
+        interpret=interpret,
+    )(codes)
+
+
+def _unpack_codes_kernel(packed_ref, codes_ref):
+    w = packed_ref[...]                      # (TR, 64) i32
+    tr = w.shape[0]
+    lo = w & 0xFFFF
+    hi = (w >> 16) & 0xFFFF
+    codes_ref[...] = jnp.stack([lo, hi], axis=-1).reshape(tr, _LANES)
+
+
+def unpack_codes_tiles(packed: jax.Array, *, tile_rows: int = 8,
+                       interpret: bool = True) -> jax.Array:
+    """(rows, 64) i32 u16-pair words -> (rows, 128) i32 codes."""
+    rows, words = packed.shape
+    assert words == CODE_WORDS
+    tr = _tile_rows(rows, tile_rows)
+    return pl.pallas_call(
+        _unpack_codes_kernel,
+        grid=(rows // tr,),
+        in_specs=[pl.BlockSpec((tr, CODE_WORDS), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tr, _LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, _LANES), jnp.int32),
+        interpret=interpret,
+    )(packed)
+
+
+def _pack_bitmap_kernel(bits_ref, out_ref):
+    bits = bits_ref[...]                     # (TR, 128) i32 in {0, 1}
+    tr = bits.shape[0]
+    b = bits.reshape(tr, BITMAP_WORDS, 32)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (tr, BITMAP_WORDS, 32), 2)
+    out_ref[...] = jnp.sum(b << lane, axis=-1).astype(jnp.int32)
+
+
+def pack_bitmap_tiles(bits: jax.Array, *, tile_rows: int = 8,
+                      interpret: bool = True) -> jax.Array:
+    """bits (rows, 128) i32/bool -> (rows, 4) i32 ballot words (LSB first)."""
+    rows, lanes = bits.shape
+    assert lanes == _LANES
+    tr = _tile_rows(rows, tile_rows)
+    return pl.pallas_call(
+        _pack_bitmap_kernel,
+        grid=(rows // tr,),
+        in_specs=[pl.BlockSpec((tr, _LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tr, BITMAP_WORDS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, BITMAP_WORDS), jnp.int32),
+        interpret=interpret,
+    )(bits.astype(jnp.int32))
+
+
+def _unpack_bitmap_kernel(packed_ref, bits_ref):
+    w = packed_ref[...]                      # (TR, 4) i32
+    tr = w.shape[0]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (tr, BITMAP_WORDS, 32), 2)
+    bits_ref[...] = ((w[:, :, None] >> lane) & 1).reshape(tr, _LANES)
+
+
+def unpack_bitmap_tiles(packed: jax.Array, *, tile_rows: int = 8,
+                        interpret: bool = True) -> jax.Array:
+    """(rows, 4) i32 ballot words -> (rows, 128) i32 bits in {0, 1}."""
+    rows, words = packed.shape
+    assert words == BITMAP_WORDS
+    tr = _tile_rows(rows, tile_rows)
+    return pl.pallas_call(
+        _unpack_bitmap_kernel,
+        grid=(rows // tr,),
+        in_specs=[pl.BlockSpec((tr, BITMAP_WORDS), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tr, _LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, _LANES), jnp.int32),
+        interpret=interpret,
+    )(packed)

@@ -34,7 +34,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from ..configs import ALIASES, get_config
 from ..configs.shapes import (SHAPES, cell_is_applicable, input_specs,
                               skip_reason, step_kind)
-from ..distributed.sharding import (batch_pspecs, cache_pspecs, dp_axes,
+from ..distributed.sharding import (activate_mesh, batch_pspecs,
+                                    cache_pspecs, dp_axes,
                                     named_shardings, param_pspecs)
 from ..models import encdec as E
 from ..models import transformer as T
@@ -238,7 +239,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.devices.size
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with activate_mesh(mesh):
         A = _compile_once(arch, shape_name, mesh, compressed_kv, unroll,
                           variant=variant)
         t_lower = time.time() - t0

@@ -21,6 +21,11 @@ def main(argv=None):
     ap.add_argument("--b-r", type=float, default=1e-3)
     ap.add_argument("--ram-mb", type=float, default=None)
     ap.add_argument("--pipeline-depth", type=int, default=2)
+    ap.add_argument("--codec-backend", default="host",
+                    choices=("host", "device"),
+                    help="where the lossy codec runs; 'device' ships only "
+                         "the compressed wire across the host-device "
+                         "boundary (§4.3)")
     ap.add_argument("--use-kernel", action="store_true")
     args = ap.parse_args(argv)
 
@@ -28,6 +33,7 @@ def main(argv=None):
     cfg = EngineConfig(
         local_bits=args.block_bits, inner_size=args.inner_size,
         b_r=args.b_r, pipeline_depth=args.pipeline_depth,
+        codec_backend=args.codec_backend,
         use_kernel=args.use_kernel, devices=jax.devices(),
         ram_budget_bytes=(int(args.ram_mb * 2 ** 20)
                           if args.ram_mb else None))
@@ -40,6 +46,10 @@ def main(argv=None):
           f"spills={stats.n_spills}")
     print(f"[qsim] total {stats.t_total:.2f}s (decomp {stats.t_decompress:.2f}"
           f" compute {stats.t_compute:.2f} comp {stats.t_compress:.2f})")
+    print(f"[qsim] boundary traffic ({args.codec_backend} codec): "
+          f"{stats.h2d_bytes/2**20:.2f} MiB h2d, "
+          f"{stats.d2h_bytes/2**20:.2f} MiB d2h "
+          f"over {stats.n_stages} stages")
     if state is not None:
         print(f"[qsim] ||state|| = {np.linalg.norm(state):.6f}")
     return 0

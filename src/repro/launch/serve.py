@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import get_config, reduced_config
-from ..distributed.sharding import named_shardings, param_pspecs
+from ..distributed.sharding import (activate_mesh, named_shardings,
+                                    param_pspecs)
 from ..models import transformer as T
 from ..serving.kvcache import compress_prefill_cache
 
@@ -40,7 +41,7 @@ def main(argv=None):
     max_len = args.prompt_len + args.gen
     prompts = jax.random.randint(key, (args.requests, args.prompt_len),
                                  0, cfg.vocab)
-    with jax.set_mesh(mesh):
+    with activate_mesh(mesh):
         t0 = time.perf_counter()
         logits, cache = T.forward_prefill(cfg, params, prompts,
                                           max_len=max_len)

@@ -13,7 +13,8 @@ import jax
 import numpy as np
 
 from ..configs import get_config, reduced_config
-from ..distributed.sharding import named_shardings, param_pspecs
+from ..distributed.sharding import (activate_mesh, named_shardings,
+                                    param_pspecs)
 from ..models import transformer as T
 from ..optim import GradCompressor, make_optimizer
 from ..train.data import SyntheticTokens
@@ -53,7 +54,7 @@ def main(argv=None):
     rt = TrainRuntime(cfg=RuntimeConfig(ckpt_dir=args.ckpt_dir,
                                         ckpt_every=25),
                       train_step=step_fn, data_source=src)
-    with jax.set_mesh(mesh):
+    with activate_mesh(mesh):
         params, state, hist = rt.run(params, state, n_steps=args.steps)
     losses = [m_["loss"] for m_ in hist]
     print(f"[train] {args.arch} mesh={args.mesh}: "

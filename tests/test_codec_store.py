@@ -1,0 +1,119 @@
+"""Codec + two-level store, no optional deps: round trips, RAW escape,
+structured block segments, spill/alias semantics."""
+import numpy as np
+
+from repro.compression import (BlockSegments, BlockStore, PwRelParams,
+                               compress_complex_block,
+                               decompress_complex_block)
+from repro.compression.codec import decode_block_host, encode_block_host
+
+
+def test_codec_roundtrip_bound():
+    rng = np.random.default_rng(7)
+    amps = (rng.standard_normal(1024)
+            + 1j * rng.standard_normal(1024)).astype(np.complex64)
+    params = PwRelParams(b_r=1e-3)
+    out = decompress_complex_block(compress_complex_block(amps, params),
+                                   params)
+    rel = np.abs(out - amps) / np.abs(amps)
+    assert rel.max() < 2.5e-3            # sqrt(2)*b_r (re/im independent)
+
+
+def test_codec_never_inflates():
+    rng = np.random.default_rng(0)
+    # adversarial: white noise with huge dynamic range
+    amps = (rng.standard_normal(512) * 10.0 **
+            rng.uniform(-30, 0, 512)).astype(np.complex64)
+    blk = compress_complex_block(amps, PwRelParams(1e-4))
+    assert blk.nbytes <= amps.nbytes + 16
+
+
+def test_zero_block_tiny():
+    amps = np.zeros(2 ** 12, np.complex64)
+    blk = compress_complex_block(amps, PwRelParams(1e-3))
+    assert blk.nbytes < 200              # ~1000x on all-zero blocks
+    out = decompress_complex_block(blk, PwRelParams(1e-3))
+    assert np.all(out == 0)
+
+
+def test_segments_serialization_roundtrip():
+    rng = np.random.default_rng(3)
+    amps = (rng.standard_normal(300)
+            + 1j * rng.standard_normal(300)).astype(np.complex64)
+    params = PwRelParams(1e-3)
+    seg = encode_block_host(amps, params)
+    assert not seg.is_raw
+    assert seg.nbytes == len(seg.to_bytes())
+    back = BlockSegments.from_bytes(seg.to_bytes())
+    assert back == seg
+    np.testing.assert_array_equal(decode_block_host(back, params),
+                                  decode_block_host(seg, params))
+
+
+def test_segments_raw_escape_roundtrip():
+    rng = np.random.default_rng(1)
+    amps = (rng.standard_normal(64)
+            + 1j * rng.standard_normal(64)).astype(np.complex64)
+    seg = BlockSegments(n_amps=64, raw=amps.tobytes())
+    assert seg.is_raw and seg.nbytes == 8 + 64 * 8
+    back = BlockSegments.from_bytes(seg.to_bytes())
+    np.testing.assert_array_equal(
+        decode_block_host(back, PwRelParams(1e-3)), amps)
+
+
+def test_store_structured_blocks_roundtrip(tmp_path):
+    """put_block/get_block keep structure in RAM and across a disk spill."""
+    rng = np.random.default_rng(5)
+    params = PwRelParams(1e-3)
+    segs = [encode_block_host(
+        (rng.standard_normal(256)
+         + 1j * rng.standard_normal(256)).astype(np.complex64), params)
+        for _ in range(3)]
+    store = BlockStore(ram_budget_bytes=segs[0].nbytes + 1,
+                       spill_dir=str(tmp_path))
+    for i, s in enumerate(segs):
+        store.put_block(i, s)
+    assert store.stats.n_spills >= 1     # later blocks overflowed to disk
+    for i, s in enumerate(segs):
+        got = store.get_block(i)
+        assert got.n_amps == s.n_amps
+        assert got.re.codes == s.re.codes
+        assert got.im.bitmap == s.im.bitmap
+        assert (got.re.l_max, got.im.l_max) == (s.re.l_max, s.im.l_max)
+    # byte view of a structured block is its serialization
+    assert store.get(0) == segs[0].to_bytes()
+    # alias + overwrite semantics hold for structured blobs too
+    store.put_alias(10, 0)
+    store.put_block(0, segs[1])
+    assert store.get_block(10).re.codes == segs[0].re.codes
+    store.close()
+
+
+def test_store_spill_and_alias(tmp_path):
+    store = BlockStore(ram_budget_bytes=100, spill_dir=str(tmp_path))
+    a = b"x" * 80
+    b_ = b"y" * 80
+    store.put(0, a)
+    store.put(1, b_)                     # exceeds budget -> disk
+    assert store.stats.n_spills == 1
+    assert store.get(0) == a and store.get(1) == b_
+    store.put_alias(2, 1)
+    assert store.get(2) == b_
+    store.put(1, b"z" * 10)              # overwrite canonical
+    assert store.get(2) == b_            # alias still sees old blob
+    assert store.get(1) == b"z" * 10
+    store.delete(2)
+    store.delete(1)
+    assert 1 not in store and 2 not in store
+    store.close()
+
+
+def test_store_byte_accounting():
+    store = BlockStore()
+    store.put(0, b"a" * 100)
+    store.put(1, b"b" * 50)
+    assert store.total_bytes == 150
+    store.put(0, b"c" * 10)              # replace
+    assert store.total_bytes == 60
+    assert store.stats.peak_ram_bytes == 160  # old+new coexist momentarily
+    store.close()

@@ -120,3 +120,29 @@ def test_gemm_inside_jit():
     a = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
     b = jnp.asarray(rng.standard_normal((32, 32)), jnp.float32)
     np.testing.assert_allclose(f(a, b), a @ b, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("rows", [1, 4, 8, 64])
+def test_pack_unpack_codes_roundtrip(rows):
+    codes = rng.integers(0, 65536, size=rows * 128, dtype=np.int64)
+    packed = ops.pack_codes(jnp.asarray(codes))
+    assert packed.shape == (rows, 64) and packed.dtype == jnp.int32
+    # little-endian view of the words is the row-major uint16 stream
+    u16 = np.ascontiguousarray(np.asarray(packed)).view("<u2").reshape(-1)
+    np.testing.assert_array_equal(u16, codes.astype(np.uint16))
+    back = ops.unpack_codes(packed)
+    np.testing.assert_array_equal(np.asarray(back), codes)
+
+
+@pytest.mark.parametrize("rows", [1, 8, 32])
+def test_pack_unpack_bitmap_roundtrip(rows):
+    bits = rng.random(rows * 128) < 0.3
+    packed = ops.pack_sign_bitmap(jnp.asarray(bits))
+    assert packed.shape == (rows, 4) and packed.dtype == jnp.int32
+    back = ops.unpack_sign_bitmap(packed)
+    np.testing.assert_array_equal(np.asarray(back), bits)
+    # matches the pack fused into the quantizer kernel
+    x = np.where(bits, -1.0, 1.0).astype(np.float32) * \
+        rng.uniform(0.5, 2.0, rows * 128).astype(np.float32)
+    _, packed_q, _, _ = ops.quantize_block(jnp.asarray(x), b_r=1e-3)
+    np.testing.assert_array_equal(np.asarray(packed_q), np.asarray(packed))

@@ -62,7 +62,7 @@ def test_sharded_train_step_runs():
     out = _run_sub("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs import get_config, reduced_config
-        from repro.distributed.sharding import param_pspecs, named_shardings
+        from repro.distributed.sharding import activate_mesh, param_pspecs, named_shardings
         from repro.models import transformer as T
         from repro.optim import AdamW
         from repro.train.step import init_train_state, make_train_step
@@ -77,7 +77,7 @@ def test_sharded_train_step_runs():
         state = init_train_state(cfg, params, opt)
         step = jax.jit(make_train_step(cfg, opt))
         toks = jnp.zeros((8, 16), jnp.int32)
-        with jax.set_mesh(mesh):
+        with activate_mesh(mesh):
             params, state, m = step(params, state, {"tokens": toks})
         assert np.isfinite(float(m["loss"]))
         # params kept their shardings through the step

@@ -1,5 +1,8 @@
 """Property tests (hypothesis): partition validity, fusion, group math."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (GroupLayout, gates_to_unitary, fuse_gates,
