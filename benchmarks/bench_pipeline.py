@@ -1,11 +1,67 @@
-"""Fig. 12 + §4.3 boundary traffic: pipeline depth sweep and codec-backend
-comparison (host vs device-resident lossy codec).
+"""Fig. 12 + §4.3 boundary traffic + stage-compute comparison.
 
-Emits, per backend, the host↔device bytes moved per stage — the quantity
-the device codec shrinks by shipping packed codes + sign bitmaps instead
-of raw complex64 group arrays.
+Three sections:
+
+1. pipeline depth sweep (Fig. 12) on qft-14.
+2. codec-backend comparison (host vs device-resident lossy codec): the
+   host↔device bytes moved per stage — the quantity the device codec
+   shrinks by shipping packed codes + sign bitmaps instead of raw
+   complex64 group arrays.
+3. stage compute, per-gate (PR-1) path vs the planes-resident
+   transpose-minimizing schedule (core/schedule.py), side by side:
+   engine-level ``t_compute + t_fetch`` plus warm per-stage-function
+   kernel time, and the full-group transpose counts
+   (``n_transposes_naive`` vs ``n_transposes_scheduled``).  The
+   per-stage-function timing is also taken at a compute-bound layout
+   (large ``local_bits`` — fewer, bigger groups) and at qft-18, where
+   group planes outgrow the caches and elided transposes are real
+   memory passes; the tiny-group qft-14/b=7 layout is dispatch-bound
+   and shows the floor, not the ceiling.
 """
+import time
+
+import numpy as np
+
+from repro.core import EngineConfig, build_circuit, simulate_bmqsim
+from repro.core.engine import _stage_fn, _stage_mats
+from repro.core.fusion import FusedGate, fuse_gates
+from repro.core.groups import GroupLayout
+from repro.core.partition import partition_circuit
+
 from .common import emit, run_engine
+
+
+def _stage_fn_time(name: str, n: int, local_bits: int, reps: int = 8):
+    """Warm min-of-reps execution time of every stage's jitted group fn,
+    summed over stages x groups, for both compute paths."""
+    import jax.numpy as jnp
+
+    qc = build_circuit(name, n)
+    part = partition_circuit(qc, local_bits, 2)
+    rng = np.random.default_rng(0)
+    tot = {False: 0.0, True: 0.0}
+    for st in part.stages:
+        layout = GroupLayout(n, local_bits, tuple(st.inner))
+        fused = fuse_gates(st.gates, 5)
+        vg = [FusedGate(layout.remap_qubits(fg.qubits), fg.matrix)
+              for fg in fused]
+        if not vg:
+            continue
+        plan = tuple((fg.qubits, fg.is_diagonal) for fg in vg)
+        nv = layout.b + layout.m
+        base = rng.standard_normal((2, 2 ** nv)).astype(np.float32)
+        for gs in (False, True):
+            fn = _stage_fn(plan, nv, True, gs, True)
+            mats = _stage_mats(vg, plan, gs)
+            ins = [jnp.asarray(base) for _ in range(reps + 1)]
+            fn(ins[0], *mats).block_until_ready()      # compile
+            best = float("inf")
+            for r in range(reps):                      # donated buffers
+                t0 = time.perf_counter()
+                fn(ins[r + 1], *mats).block_until_ready()
+                best = min(best, time.perf_counter() - t0)
+            tot[gs] += best * layout.n_groups
+    return tot
 
 
 def main():
@@ -36,6 +92,38 @@ def main():
     host, dev = stats_by_backend["host"], stats_by_backend["device"]
     emit("pipeline", "device_boundary_reduction",
          host.boundary_bytes / max(1, dev.boundary_bytes))
+
+    # stage compute: per-gate (PR-1) vs scheduled planes path, side by side
+    qc = build_circuit("qft", 14)
+    for label, gs in (("pergate", False), ("scheduled", True)):
+        best = (float("inf"), float("inf"))     # (compute+fetch, fetch)
+        for _ in range(2):                 # second run reuses jit caches
+            _, stats = simulate_bmqsim(
+                qc, EngineConfig(local_bits=7, gate_schedule=gs),
+                collect_state=False)
+            best = min(best, (stats.t_compute + stats.t_fetch,
+                              stats.t_fetch))
+        emit("pipeline", f"compute_{label}_s", best[0])
+        emit("pipeline", f"compute_{label}_t_fetch_s", best[1])
+    # the transpose counters are a property of the schedule, not the
+    # executed path — emit them once
+    emit("pipeline", "transposes_naive", stats.n_transposes_naive)
+    emit("pipeline", "transposes_scheduled", stats.n_transposes_scheduled)
+    emit("pipeline", "transpose_reduction",
+         stats.n_transposes_naive / max(1, stats.n_transposes_scheduled))
+
+    # stage-fn kernel time (the compute the pipeline dispatches), at the
+    # paper layout, a compute-bound qft-14 layout, and a cache-exceeding
+    # qft-18 layout
+    for label, (name, n, lb, reps) in {
+        "qft14_b7": ("qft", 14, 7, 8),
+        "qft14_b12": ("qft", 14, 12, 8),
+        "qft18_b16": ("qft", 18, 16, 3),
+    }.items():
+        tot = _stage_fn_time(name, n, lb, reps)
+        emit("pipeline", f"stagefn_{label}_pergate_s", tot[False])
+        emit("pipeline", f"stagefn_{label}_scheduled_s", tot[True])
+        emit("pipeline", f"stagefn_{label}_speedup", tot[False] / tot[True])
 
 
 if __name__ == "__main__":

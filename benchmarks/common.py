@@ -16,11 +16,23 @@ from repro.core import (EngineConfig, build_circuit, fidelity,
 ALL_CIRCUITS = ["cat_state", "cc", "ising", "qft", "bv", "qsvm",
                 "ghz_state", "qaoa"]
 
+# every emit() lands here too, so the driver can dump a machine-readable
+# BENCH_*.json next to the human CSV (benchmarks/run.py --json)
+_ROWS: list[tuple[str, str, object]] = []
+
 
 def emit(bench: str, key: str, value) -> None:
+    _ROWS.append((bench, key, value))
     if isinstance(value, float):
         value = f"{value:.6g}"
     print(f"{bench},{key},{value}", flush=True)
+
+
+def drain_rows() -> list[tuple[str, str, object]]:
+    """Hand the accumulated (bench, key, value) rows over and reset."""
+    rows = _ROWS[:]
+    _ROWS.clear()
+    return rows
 
 
 def timed(fn, *args, **kw):

@@ -39,7 +39,8 @@ def main():
           f"{stats.memory_reduction:.1f}x reduction)")
     print(f"spills to disk tier: {stats.n_spills}")
     print(f"phase times: decompress {stats.t_decompress:.2f}s "
-          f"compute {stats.t_compute:.2f}s compress {stats.t_compress:.2f}s "
+          f"compute {stats.t_compute:.2f}s fetch {stats.t_fetch:.2f}s "
+          f"compress {stats.t_compress:.2f}s "
           f"total {stats.t_total:.2f}s")
     # memory-conscious readout: sample bitstrings straight from the
     # compressed store (block-streaming; peak extra memory = one block)

@@ -51,8 +51,9 @@ from .segments import BlockSegments, PlaneSegments
 
 __all__ = [
     "PlaneWire", "plane_geometry", "sign_wire_bytes",
-    "encode_group_device", "fetch_group_wire", "wire_to_segments",
-    "segments_to_wire", "decode_block_device", "decode_blocks_device",
+    "encode_group_device", "encode_group_planes", "fetch_group_wire",
+    "wire_to_segments", "segments_to_wire", "decode_block_device",
+    "decode_blocks_device", "decode_blocks_planes",
 ]
 
 _LANES = 128
@@ -107,29 +108,29 @@ def _encode_plane_dev(x: jax.Array, pad: int, step: float,
 
 
 @partial(jax.jit, static_argnames=("n_blocks", "step", "interpret"))
-def _encode_group_jit(amps: jax.Array, n_blocks: int, step: float,
+def _encode_group_jit(planes: jax.Array, n_blocks: int, step: float,
                       interpret: bool):
-    bsz = amps.shape[0] // n_blocks
+    bsz = planes.shape[1] // n_blocks
     _, pad = plane_geometry(bsz)
-    blocks = amps.reshape(n_blocks, bsz)
+    re = planes[0].reshape(n_blocks, bsz)
+    im = planes[1].reshape(n_blocks, bsz)
     out = []
     for i in range(n_blocks):
-        blk = blocks[i]
         out.append((
-            _encode_plane_dev(jnp.real(blk).astype(jnp.float32), pad, step,
-                              interpret),
-            _encode_plane_dev(jnp.imag(blk).astype(jnp.float32), pad, step,
-                              interpret),
+            _encode_plane_dev(re[i], pad, step, interpret),
+            _encode_plane_dev(im[i], pad, step, interpret),
         ))
     return tuple(out)
 
 
-def encode_group_device(amps: jax.Array, n_blocks: int, params: PwRelParams,
-                        *, interpret: bool = True):
-    """Dispatch the lossy encode of a flat group array on its device.
+def encode_group_planes(planes: jax.Array, n_blocks: int,
+                        params: PwRelParams, *, interpret: bool = True):
+    """Dispatch the lossy encode of a planes-resident group on its device.
 
     Args:
-        amps: (n_blocks * 2^b,) complex64 group array (device-resident).
+        planes: (2, n_blocks * 2^b) f32 re/im plane stack (device-resident)
+            — the stage compute's native representation; no complex64 is
+            materialized on the encode path.
         n_blocks: SV blocks in the group (2^m).
         params: pwrel bound.
 
@@ -137,7 +138,16 @@ def encode_group_device(amps: jax.Array, n_blocks: int, params: PwRelParams,
         Tuple of ``(re: PlaneWire, im: PlaneWire)`` per block — device
         arrays, dispatched asynchronously (nothing is fetched yet).
     """
-    return _encode_group_jit(amps, n_blocks, log_step(params.b_r), interpret)
+    return _encode_group_jit(jnp.asarray(planes, jnp.float32), n_blocks,
+                             log_step(params.b_r), interpret)
+
+
+def encode_group_device(amps: jax.Array, n_blocks: int, params: PwRelParams,
+                        *, interpret: bool = True):
+    """Complex-array convenience over :func:`encode_group_planes` —
+    identical stored bytes (a complex64's components are already f32)."""
+    planes = jnp.stack([jnp.real(amps), jnp.imag(amps)]).astype(jnp.float32)
+    return encode_group_planes(planes, n_blocks, params, interpret=interpret)
 
 
 def fetch_group_wire(encoded) -> tuple[list[tuple[PlaneWire, PlaneWire]], int]:
@@ -252,15 +262,20 @@ def _decode_plane_dev(codes_u16: jax.Array, sign_bytes: jax.Array,
 def _decode_blocks_jit(codes, sign_bytes, l_max, n: int, step: float,
                        interpret: bool):
     """codes (2k, n) u16 / sign_bytes (2k, s) u8 / l_max (2k, 1, 1) f32,
-    planes in block order [re0, im0, re1, im1, ...] -> (k, n) complex64."""
+    planes in block order [re0, im0, re1, im1, ...] -> (k, 2, n) f32."""
     k2 = codes.shape[0]
     planes = [_decode_plane_dev(codes[i], sign_bytes[i], l_max[i], n, step,
                                 interpret) for i in range(k2)]
-    return jnp.stack([planes[2 * j] + 1j * planes[2 * j + 1]
-                      for j in range(k2 // 2)]).astype(jnp.complex64)
+    return jnp.stack(planes).reshape(k2 // 2, 2, n)
 
 
-def decode_blocks_device(pairs: list, n: int, params: PwRelParams, device,
+@partial(jax.jit, static_argnames=())
+def _planes_to_complex(planes: jax.Array) -> jax.Array:
+    """(..., 2, n) f32 plane pairs -> (..., n) complex64."""
+    return (planes[..., 0, :] + 1j * planes[..., 1, :]).astype(jnp.complex64)
+
+
+def decode_blocks_planes(pairs: list, n: int, params: PwRelParams, device,
                          *, interpret: bool = True) -> tuple[jax.Array, int]:
     """Ship several blocks' wire arrays to ``device`` in three batched
     transfers and decode them in one kernel dispatch.
@@ -268,7 +283,8 @@ def decode_blocks_device(pairs: list, n: int, params: PwRelParams, device,
     Args:
         pairs: per-block ``(re, im)`` host :class:`PlaneWire` tuples.
 
-    Returns (device complex64 blocks (len(pairs), n), bytes moved h2d).
+    Returns (device f32 planes (len(pairs), 2, n), bytes moved h2d) — the
+    stage compute's native representation; no complex64 is materialized.
     The decode is dispatched asynchronously — callers can overlap it with
     compute of the previous group (§4.2).
     """
@@ -282,6 +298,17 @@ def decode_blocks_device(pairs: list, n: int, params: PwRelParams, device,
         jax.device_put(l_max, device), n=n, step=log_step(params.b_r),
         interpret=interpret)
     return blocks, moved
+
+
+def decode_blocks_device(pairs: list, n: int, params: PwRelParams, device,
+                         *, interpret: bool = True) -> tuple[jax.Array, int]:
+    """Complex-array convenience over :func:`decode_blocks_planes`.
+
+    Returns (device complex64 blocks (len(pairs), n), bytes moved h2d).
+    """
+    planes, moved = decode_blocks_planes(pairs, n, params, device,
+                                         interpret=interpret)
+    return _planes_to_complex(planes), moved
 
 
 def decode_block_device(pair: tuple[PlaneWire, PlaneWire], n: int,

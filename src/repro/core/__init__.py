@@ -14,3 +14,4 @@ from .pipeline import (  # noqa: F401
     make_backend,
 )
 from .measure import block_probabilities, expect_diagonal, sample_counts  # noqa: F401
+from .schedule import StageSchedule, compile_schedule, execute_schedule  # noqa: F401

@@ -16,6 +16,12 @@ boundary) or ``"device"`` (§4.3: the Pallas quantize/pack kernels run next
 to the compute and only the compressed wire representation crosses).
 Groups never communicate: multi-device execution (§4.2 multi-GPU) is plain
 round-robin group placement with zero collectives.
+
+On the device the group is *planes-resident*: it lives as a (2, 2^(b+m))
+f32 re/im plane stack from decode through every fused gate to encode, and
+each stage's gate list is compiled into a transpose-minimizing schedule
+(:mod:`repro.core.schedule`) instead of the per-gate
+transpose/apply/inverse-transpose pattern.
 """
 from __future__ import annotations
 
@@ -35,7 +41,9 @@ from .dense_engine import apply_matrix
 from .fusion import FusedGate, fuse_gates
 from .groups import GroupLayout
 from .partition import Partition, partition_circuit
-from .pipeline import StagePipeline, make_backend
+from .pipeline import (StagePipeline, complex_to_planes, make_backend,
+                       planes_to_complex)
+from .schedule import compile_schedule, execute_schedule
 
 __all__ = ["EngineConfig", "SimStats", "BMQSimEngine", "simulate_bmqsim"]
 
@@ -65,7 +73,15 @@ class EngineConfig:
         ram_budget_bytes: primary-tier budget of the two-level store (§4.4);
             overflow spills to disk.
         spill_dir: secondary-tier directory (default: a temp dir).
-        use_kernel: apply gates via the Pallas gate kernels instead of XLA.
+        use_kernel: apply gates via the Pallas gate kernels instead of XLA
+            contractions (default: on — the planes-resident schedule makes
+            this the fast path).
+        gate_schedule: compile each stage's gate list into a
+            transpose-minimizing schedule over f32 re/im planes
+            (:mod:`repro.core.schedule`).  False restores the PR-1
+            per-gate path (transpose -> apply -> inverse transpose per
+            fused unitary, complex64 round-trip per gate) — kept for the
+            side-by-side benchmark.
         devices: round-robin group placement targets (default: device 0).
         per_gate: SC19-Sim baseline — one stage per gate, i.e. a full
             decompress+recompress sweep per gate (§3).
@@ -81,7 +97,8 @@ class EngineConfig:
     codec_backend: str = "host"
     ram_budget_bytes: int | None = None
     spill_dir: str | None = None
-    use_kernel: bool = False
+    use_kernel: bool = True
+    gate_schedule: bool = True
     devices: list | None = None
     per_gate: bool = False
 
@@ -94,6 +111,12 @@ class SimStats:
     host↔device boundary through the stage pipeline — the quantity the
     device codec backend shrinks; ``per_stage_boundary_bytes`` records the
     per-stage (h2d, d2h) pairs for the boundary-traffic benchmarks.
+
+    ``t_compute`` is dispatch + kernel time only; the blocking wait at the
+    d2h boundary is ``t_fetch`` (previously misattributed to compute).
+    ``n_transposes_naive`` / ``n_transposes_scheduled`` count full-group
+    transposes (per group execution) under the per-gate scheme vs the
+    compiled stage schedule — both are recorded whichever path ran.
     """
 
     n_qubits: int = 0
@@ -109,8 +132,11 @@ class SimStats:
     h2d_bytes: int = 0
     d2h_bytes: int = 0
     per_stage_boundary_bytes: list = field(default_factory=list)
+    n_transposes_naive: int = 0
+    n_transposes_scheduled: int = 0
     t_decompress: float = 0.0
     t_compute: float = 0.0
+    t_fetch: float = 0.0
     t_compress: float = 0.0
     t_partition: float = 0.0
     t_total: float = 0.0
@@ -135,8 +161,16 @@ class SimStats:
 
 
 # --------------------------------------------------------------------------
-# stage compute: fused unitaries applied to a flat 2^nv group array
+# stage compute: fused unitaries applied to a planes-resident group
 # --------------------------------------------------------------------------
+#
+# The group lives as a (2, 2^(b+m)) f32 re/im plane stack from the codec
+# backend's decode output all the way through every fused gate to the
+# encode input; complex64 exists only inside the host backend and at
+# _collect.  The default path executes the stage's compiled
+# transpose-minimizing schedule (core/schedule.py); gate_schedule=False
+# keeps the PR-1 per-gate path (complex64 round-trip + a transpose pair
+# per gate) for the side-by-side benchmark.
 
 def _apply_fused(amps: jax.Array, mats: tuple[jax.Array, ...],
                  plan: tuple[tuple[tuple[int, ...], bool], ...],
@@ -159,22 +193,52 @@ def _apply_fused(amps: jax.Array, mats: tuple[jax.Array, ...],
 
 @lru_cache(maxsize=512)
 def _stage_fn(plan: tuple[tuple[tuple[int, ...], bool], ...], nv: int,
-              use_kernel: bool):
-    """Jitted group-update function, cached on the stage *structure* so
-    stages with identical access patterns share one compilation.  The
-    group buffer is donated: the decoded input array is dead once the
-    stage's unitaries consume it, so XLA may update in place."""
-    if use_kernel:
+              use_kernel: bool, gate_schedule: bool, interpret: bool):
+    """Jitted planes -> planes group-update function, cached on the stage
+    *structure* so stages with identical access patterns share one
+    compilation.  The plane stack is donated: the decoded input is dead
+    once the stage's unitaries consume it, so XLA may update in place."""
+    if gate_schedule:
+        sched = compile_schedule(plan, nv)
+
+        def fn(planes, *mats):
+            return execute_schedule(sched, planes, mats,
+                                    use_kernel=use_kernel,
+                                    interpret=interpret)
+    elif use_kernel:
         from ..kernels import ops as kops
 
-        def fn(amps, *mats):
+        def fn(planes, *mats):
+            amps = planes_to_complex(planes)
             for mat, (vqubits, diag) in zip(mats, plan):
-                amps = kops.apply_fused_gate(amps, mat, vqubits, nv, diag)
-            return amps
+                amps = kops.apply_fused_gate(amps, mat, vqubits, nv, diag,
+                                             interpret=interpret)
+            return complex_to_planes(amps)
     else:
-        def fn(amps, *mats):
-            return _apply_fused(amps, mats, plan, nv)
+        def fn(planes, *mats):
+            amps = planes_to_complex(planes)
+            amps = _apply_fused(amps, mats, plan, nv)
+            return complex_to_planes(amps)
     return jax.jit(fn, donate_argnums=0)
+
+
+def _stage_mats(vgates: list[FusedGate],
+                plan: tuple[tuple[tuple[int, ...], bool], ...],
+                gate_schedule: bool) -> list[jax.Array]:
+    """Per-gate operands in the form the selected stage path consumes:
+    stacked (2, K, K) f32 planes of U (or (2, K) diagonal planes) for
+    the scheduled path, complex64 matrices for the legacy path."""
+    if gate_schedule:
+        mats = []
+        for fg, (_, diag) in zip(vgates, plan):
+            m = np.diag(fg.matrix) if diag else fg.matrix
+            mats.append(jnp.asarray(np.stack([m.real, m.imag]), jnp.float32))
+        return mats
+    return [
+        jnp.asarray(np.diag(fg.matrix) if diag else fg.matrix,
+                    dtype=jnp.complex64)
+        for fg, (_, diag) in zip(vgates, plan)
+    ]
 
 
 class BMQSimEngine:
@@ -270,6 +334,7 @@ class BMQSimEngine:
                     (back.h2d_bytes - sh2d, back.d2h_bytes - sd2h))
         self.stats.t_decompress += pipe.t_load
         self.stats.t_compute += pipe.t_compute
+        self.stats.t_fetch += pipe.t_fetch
         self.stats.t_compress += pipe.t_store
         self.stats.h2d_bytes += back.h2d_bytes - h2d0
         self.stats.d2h_bytes += back.d2h_bytes - d2h0
@@ -285,12 +350,16 @@ class BMQSimEngine:
                    vgates: list[FusedGate]) -> None:
         nv = layout.b + layout.m
         plan = tuple((fg.qubits, fg.is_diagonal) for fg in vgates)
-        fn = _stage_fn(plan, nv, self.cfg.use_kernel)
-        mats = [
-            jnp.asarray(np.diag(fg.matrix) if diag else fg.matrix,
-                        dtype=jnp.complex64)
-            for fg, (_, diag) in zip(vgates, plan)
-        ]
+        fn = _stage_fn(plan, nv, self.cfg.use_kernel,
+                       self.cfg.gate_schedule, default_interpret())
+        # transpose accounting: both counters are recorded whichever path
+        # executes, so the scheduled/naive ratio is always reportable
+        sched = compile_schedule(plan, nv)
+        self.stats.n_transposes_naive += \
+            sched.n_transposes_naive * layout.n_groups
+        self.stats.n_transposes_scheduled += \
+            sched.n_transposes * layout.n_groups
+        mats = _stage_mats(vgates, plan, self.cfg.gate_schedule)
         pipe.run_stage(layout.group_block_ids(), fn, mats)
 
     def _snap_store_stats(self) -> None:

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import threading
 import time
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 
 import jax
@@ -40,15 +41,30 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..compression.codec import decode_block_host, encode_block_host
-from ..compression.device_codec import (decode_blocks_device,
-                                        encode_group_device,
+from ..compression.device_codec import (decode_blocks_planes,
+                                        encode_group_planes,
                                         fetch_group_wire, segments_to_wire,
                                         wire_to_segments)
 from ..compression.pwrel import PwRelParams
 from ..compression.store import BlockStore
 
 __all__ = ["CodecBackend", "HostCodecBackend", "DeviceCodecBackend",
-           "StagePipeline", "make_backend"]
+           "StagePipeline", "make_backend",
+           "complex_to_planes", "planes_to_complex"]
+
+
+def complex_to_planes(amps: jax.Array) -> jax.Array:
+    """(n,) complex64 -> (2, n) f32 re/im plane stack (traceable)."""
+    return jnp.stack([jnp.real(amps), jnp.imag(amps)]).astype(jnp.float32)
+
+
+def planes_to_complex(planes: jax.Array) -> jax.Array:
+    """(2, n) f32 plane stack -> (n,) complex64 (traceable)."""
+    return (planes[0] + 1j * planes[1]).astype(jnp.complex64)
+
+
+_complex_to_planes = jax.jit(complex_to_planes)
+_planes_to_complex = jax.jit(planes_to_complex)
 
 
 class CodecBackend:
@@ -117,11 +133,13 @@ class CodecBackend:
         raise NotImplementedError
 
     def stage_to_device(self, staged, device) -> jax.Array:
-        """Dispatch thread: host staging -> flat device group array (async)."""
+        """Dispatch thread: host staging -> (2, 2^(b+m)) f32 device plane
+        stack (async) — the stage compute's planes-resident input."""
         raise NotImplementedError
 
-    def fetch_result(self, amps_dev: jax.Array, n_blocks: int):
-        """Dispatch thread: device result -> host result object (blocks)."""
+    def fetch_result(self, planes_dev: jax.Array, n_blocks: int):
+        """Dispatch thread: device plane stack -> host result object
+        (blocks).  This is the pipeline's blocking boundary wait."""
         raise NotImplementedError
 
     def store_group(self, block_ids: np.ndarray, result) -> None:
@@ -140,16 +158,22 @@ class HostCodecBackend(CodecBackend):
     name = "host"
 
     def fetch_group(self, block_ids):
-        parts = [self.decode_host_block(int(bid)) for bid in block_ids]
-        self.add_counts(decompressions=len(parts))
-        return np.concatenate(parts) if len(parts) > 1 else parts[0]
+        # decode straight into one preallocated flat group array — no
+        # per-group np.concatenate copy
+        flat = np.empty(len(block_ids) * self.bsz, dtype=np.complex64)
+        for i, bid in enumerate(block_ids):
+            flat[i * self.bsz:(i + 1) * self.bsz] = \
+                self.decode_host_block(int(bid))
+        self.add_counts(decompressions=len(block_ids))
+        return flat
 
     def stage_to_device(self, staged, device):
         self.h2d_bytes += staged.nbytes
-        return jax.device_put(jnp.asarray(staged), device)
+        return _complex_to_planes(jax.device_put(jnp.asarray(staged), device))
 
-    def fetch_result(self, amps_dev, n_blocks):
-        out = np.asarray(amps_dev)            # blocks until device finishes
+    def fetch_result(self, planes_dev, n_blocks):
+        # complex64 is re-materialized on device, then fetched raw
+        out = np.asarray(_planes_to_complex(planes_dev))  # blocking wait
         self.d2h_bytes += out.nbytes
         return out
 
@@ -190,26 +214,29 @@ class DeviceCodecBackend(CodecBackend):
         return staged
 
     def stage_to_device(self, staged, device):
-        parts: list = [None] * len(staged)
+        parts: list = [None] * len(staged)        # per block: (2, bsz) f32
         wire_idx = []
         for i, (kind, payload) in enumerate(staged):
             if kind == "raw":
                 self.h2d_bytes += payload.nbytes
-                parts[i] = jax.device_put(jnp.asarray(payload), device)
+                parts[i] = _complex_to_planes(
+                    jax.device_put(jnp.asarray(payload), device))
             else:
                 wire_idx.append(i)
         if wire_idx:
-            # batched: 3 transfers + 1 decode dispatch for the whole group
-            blocks, moved = decode_blocks_device(
+            # batched: 3 transfers + 1 decode dispatch for the whole group;
+            # the decode lands directly on f32 planes — no complex detour
+            blocks, moved = decode_blocks_planes(
                 [staged[i][1] for i in wire_idx], self.bsz, self.params,
                 device, interpret=self.interpret)
             self.h2d_bytes += moved
             for j, i in enumerate(wire_idx):
                 parts[i] = blocks[j]
-        return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+        return (jnp.concatenate(parts, axis=1) if len(parts) > 1
+                else parts[0])
 
-    def fetch_result(self, amps_dev, n_blocks):
-        encoded = encode_group_device(amps_dev, n_blocks, self.params,
+    def fetch_result(self, planes_dev, n_blocks):
+        encoded = encode_group_planes(planes_dev, n_blocks, self.params,
                                       interpret=self.interpret)
         wire, moved = fetch_group_wire(encoded)   # blocks until done
         self.d2h_bytes += moved
@@ -229,12 +256,17 @@ def make_backend(name: str, store: BlockStore, params: PwRelParams,
                  *, interpret: bool = True) -> CodecBackend:
     """Resolve an ``EngineConfig.codec_backend`` name to a backend.
 
-    ``"device"`` silently degrades to ``"host"`` when ``compression`` is
-    off — there is no device half to a raw byte copy.
+    ``"device"`` degrades to ``"host"`` (with a ``RuntimeWarning``) when
+    ``compression`` is off — there is no device half to a raw byte copy.
     """
     if name == "device" and compression:
         return DeviceCodecBackend(store, params, bsz, compression, prescan,
                                   interpret=interpret)
+    if name == "device":
+        warnings.warn(
+            "codec_backend='device' requires compression=True; "
+            "falling back to the host codec backend",
+            RuntimeWarning, stacklevel=2)
     if name in ("host", "device"):
         return HostCodecBackend(store, params, bsz, compression, prescan)
     raise ValueError(f"unknown codec backend {name!r} "
@@ -261,7 +293,8 @@ class StagePipeline:
         self.depth = max(1, depth)
         self.devices = devices or [jax.devices()[0]]
         self.t_load = 0.0
-        self.t_compute = 0.0
+        self.t_compute = 0.0     # h2d staging + kernel dispatch (non-blocking)
+        self.t_fetch = 0.0       # blocking result wait at the d2h boundary
         self.t_store = 0.0
         self._t_lock = threading.Lock()  # _load/_store run concurrently
         self._dec_pool: ThreadPoolExecutor | None = None
@@ -326,8 +359,10 @@ class StagePipeline:
             if nxt in pending_load and pending_load[nxt].done():
                 staged_dev[nxt] = self.backend.stage_to_device(
                     pending_load.pop(nxt).result(), self._device_for(nxt))
-            result = self.backend.fetch_result(out, n_blocks)
             self.t_compute += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            result = self.backend.fetch_result(out, n_blocks)
+            self.t_fetch += time.perf_counter() - t0
             pending_save.append(
                 self._com_pool.submit(self._store, block_ids[g], result))
         for fut in pending_save:               # stage barrier (§4.1 semantics)

@@ -20,6 +20,13 @@ There is also a diagonal fast path (``diag_apply``): stage partitions of
 phase-heavy circuits (QFT's controlled-phase ladders) fuse into diagonal
 unitaries, for which the update is an elementwise complex multiply on the
 VPU — no MXU pass at all.
+
+``gemm_planes_mid`` is the transpose-eliding sibling used by the stage
+scheduler (core/schedule.py): when a gate's qubit axes form a contiguous
+block that is *not* minor-most, the group tensor reshapes to
+(outer, K, inner) and the update is the batched left-contraction
+C[o] = U @ A[o] — the K axis stays in the sublane dimension and ``inner``
+stays in the lanes, so no data movement happens at all.
 """
 from __future__ import annotations
 
@@ -29,7 +36,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["gemm_planes", "diag_apply", "DEFAULT_ROW_TILE"]
+__all__ = ["gemm_planes", "gemm_planes_mid", "diag_apply",
+           "DEFAULT_ROW_TILE"]
 
 DEFAULT_ROW_TILE = 256
 
@@ -63,6 +71,47 @@ def gemm_planes(ar: jax.Array, ai: jax.Array, br: jax.Array, bi: jax.Array,
         grid=grid,
         in_specs=[a_spec, a_spec, b_spec, b_spec],
         out_specs=[out_spec, out_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(ar, ai, br, bi)
+
+
+def _gemm_mid_kernel(ar_ref, ai_ref, br_ref, bi_ref, cr_ref, ci_ref):
+    ar = ar_ref[0]            # (K, TI) slab of one outer batch
+    ai = ai_ref[0]
+    br = br_ref[...]          # (K, K) = U, broadcast to every program
+    bi = bi_ref[...]
+    dot = functools.partial(jnp.dot, preferred_element_type=jnp.float32)
+    cr_ref[0] = dot(br, ar) - dot(bi, ai)
+    ci_ref[0] = dot(br, ai) + dot(bi, ar)
+
+
+def gemm_planes_mid(ar: jax.Array, ai: jax.Array,
+                    br: jax.Array, bi: jax.Array,
+                    *, inner_tile: int = DEFAULT_ROW_TILE,
+                    interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """(O, K, I) complex batched left-GEMM C[o] = U @ A[o] on re/im planes.
+
+    ``br``/``bi`` are U's planes (NOT transposed — the contraction is over
+    A's middle axis).  Grid is 2-D over (outer batch, inner tiles); the
+    inner axis stays minor so the existing memory layout feeds the MXU
+    with no transpose.
+    """
+    O, K, I = ar.shape
+    assert br.shape == (K, K) and bi.shape == (K, K) and ai.shape == (O, K, I)
+    ti = min(inner_tile, I)
+    while I % ti:       # O, K, I are powers of two in every caller
+        ti //= 2
+    grid = (O, I // ti)
+    a_spec = pl.BlockSpec((1, K, ti), lambda o, t: (o, 0, t))
+    b_spec = pl.BlockSpec((K, K), lambda o, t: (0, 0))
+    out_shape = [jax.ShapeDtypeStruct((O, K, I), jnp.float32)] * 2
+    fn = pl.pallas_call(
+        _gemm_mid_kernel,
+        grid=grid,
+        in_specs=[a_spec, a_spec, b_spec, b_spec],
+        out_specs=[a_spec, a_spec],
         out_shape=out_shape,
         interpret=interpret,
     )

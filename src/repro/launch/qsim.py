@@ -26,7 +26,16 @@ def main(argv=None):
                     help="where the lossy codec runs; 'device' ships only "
                          "the compressed wire across the host-device "
                          "boundary (§4.3)")
-    ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--use-kernel", dest="use_kernel", action="store_true",
+                    default=True,
+                    help="apply gates via the Pallas plane kernels "
+                         "(default; --no-kernel for XLA contractions)")
+    ap.add_argument("--no-kernel", dest="use_kernel", action="store_false")
+    ap.add_argument("--no-schedule", dest="gate_schedule",
+                    action="store_false", default=True,
+                    help="disable the transpose-minimizing stage schedule "
+                         "and run the per-gate transpose/apply/inverse "
+                         "path (for comparison)")
     args = ap.parse_args(argv)
 
     qc = build_circuit(args.circuit, args.qubits)
@@ -34,7 +43,8 @@ def main(argv=None):
         local_bits=args.block_bits, inner_size=args.inner_size,
         b_r=args.b_r, pipeline_depth=args.pipeline_depth,
         codec_backend=args.codec_backend,
-        use_kernel=args.use_kernel, devices=jax.devices(),
+        use_kernel=args.use_kernel, gate_schedule=args.gate_schedule,
+        devices=jax.devices(),
         ram_budget_bytes=(int(args.ram_mb * 2 ** 20)
                           if args.ram_mb else None))
     state, stats = simulate_bmqsim(qc, cfg,
@@ -45,7 +55,10 @@ def main(argv=None):
           f"({stats.memory_reduction:.1f}x less than standard), "
           f"spills={stats.n_spills}")
     print(f"[qsim] total {stats.t_total:.2f}s (decomp {stats.t_decompress:.2f}"
-          f" compute {stats.t_compute:.2f} comp {stats.t_compress:.2f})")
+          f" compute {stats.t_compute:.2f} fetch {stats.t_fetch:.2f}"
+          f" comp {stats.t_compress:.2f})")
+    print(f"[qsim] group transposes: {stats.n_transposes_scheduled} "
+          f"scheduled vs {stats.n_transposes_naive} per-gate")
     print(f"[qsim] boundary traffic ({args.codec_backend} codec): "
           f"{stats.h2d_bytes/2**20:.2f} MiB h2d, "
           f"{stats.d2h_bytes/2**20:.2f} MiB d2h "

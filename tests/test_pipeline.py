@@ -20,15 +20,40 @@ def _fidelity_vs_dense(qc, state) -> float:
     return fidelity(ideal, state.astype(np.complex128))
 
 
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("pipeline_depth", [1, 2])
 @pytest.mark.parametrize("backend", ["host", "device"])
 @pytest.mark.parametrize("name,n", [("ghz_state", 10), ("qft", 10)])
-def test_backend_fidelity_vs_dense(backend, name, n):
+def test_backend_fidelity_vs_dense(backend, name, n, pipeline_depth,
+                                   use_kernel):
     qc = build_circuit(name, n)
     state, stats = simulate_bmqsim(
-        qc, EngineConfig(local_bits=6, b_r=1e-3, codec_backend=backend))
+        qc, EngineConfig(local_bits=6, b_r=1e-3, codec_backend=backend,
+                         pipeline_depth=pipeline_depth,
+                         use_kernel=use_kernel))
     assert _fidelity_vs_dense(qc, state) >= 0.99
     assert stats.h2d_bytes > 0 and stats.d2h_bytes > 0
     assert len(stats.per_stage_boundary_bytes) == stats.n_stages
+    assert stats.n_transposes_scheduled <= stats.n_transposes_naive
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_scheduled_matches_pergate_path(use_kernel):
+    """The transpose-minimizing schedule and the per-gate path agree to
+    float32 arithmetic noise on the same lossy pipeline."""
+    qc = build_circuit("qft", 9)
+    out = {}
+    for gs in (False, True):
+        state, stats = simulate_bmqsim(
+            qc, EngineConfig(local_bits=5, b_r=1e-3, use_kernel=use_kernel,
+                             gate_schedule=gs))
+        out[gs] = (state, stats)
+    f = fidelity(out[False][0].astype(np.complex128),
+                 out[True][0].astype(np.complex128))
+    assert f >= 0.999999
+    # the point of the schedule: strictly fewer full-group transposes
+    assert (out[True][1].n_transposes_scheduled
+            < out[True][1].n_transposes_naive)
 
 
 @pytest.mark.parametrize("name", ["ghz_state", "qft"])
@@ -64,16 +89,54 @@ def test_device_backend_with_pipeline_depth_and_spill(tmp_path):
 
 def test_device_backend_falls_back_without_compression():
     qc = build_circuit("ghz_state", 8)
-    state, stats = simulate_bmqsim(
-        qc, EngineConfig(local_bits=5, compression=False,
-                         codec_backend="device"))
+    with pytest.warns(RuntimeWarning, match="falling back to the host"):
+        state, stats = simulate_bmqsim(
+            qc, EngineConfig(local_bits=5, compression=False,
+                             codec_backend="device"))
     assert _fidelity_vs_dense(qc, state) >= 0.999999
+
+
+def test_device_backend_no_warning_with_compression():
+    import warnings
+
+    qc = build_circuit("ghz_state", 8)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        state, _ = simulate_bmqsim(
+            qc, EngineConfig(local_bits=5, codec_backend="device"))
+    assert not [w for w in caught if "falling back to the host" in str(w.message)]
+    assert _fidelity_vs_dense(qc, state) >= 0.99
 
 
 def test_unknown_backend_rejected():
     with pytest.raises(ValueError, match="codec backend"):
         simulate_bmqsim(build_circuit("ghz_state", 6),
                         EngineConfig(local_bits=4, codec_backend="gpu"))
+
+
+def test_planes_path_matches_dense_on_random_circuits():
+    """Hypothesis property: the planes-resident scheduled path tracks the
+    dense oracle on random circuits across layouts and backends."""
+    pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    from repro.core import random_circuit
+
+    @settings(max_examples=12, deadline=None)
+    @given(n=st.integers(4, 8), b=st.integers(2, 6),
+           n_gates=st.integers(1, 30), seed=st.integers(0, 10_000),
+           backend=st.sampled_from(["host", "device"]),
+           use_kernel=st.booleans())
+    def prop(n, b, n_gates, seed, backend, use_kernel):
+        qc = random_circuit(n, n_gates, seed=seed)
+        state, stats = simulate_bmqsim(
+            qc, EngineConfig(local_bits=min(b, n), b_r=1e-4,
+                             codec_backend=backend, use_kernel=use_kernel,
+                             gate_schedule=True))
+        assert _fidelity_vs_dense(qc, state) >= 1 - 1e-3
+        assert stats.n_transposes_scheduled <= stats.n_transposes_naive
+
+    prop()
 
 
 def test_device_codec_blocks_readable_by_host_codec():

@@ -1,0 +1,142 @@
+"""Stage scheduler: transpose elision rules + planes execution vs the
+dense oracle (core/schedule.py)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.dense_engine import apply_matrix
+from repro.core.schedule import (DiagOp, GemmOp, MidGemmOp, TransposeOp,
+                                 compile_schedule, execute_schedule)
+
+rng = np.random.default_rng(7)
+
+
+def _rand_unitary(K):
+    m = rng.standard_normal((K, K)) + 1j * rng.standard_normal((K, K))
+    q, r = np.linalg.qr(m)
+    return (q * (np.diag(r) / np.abs(np.diag(r)))).astype(np.complex64)
+
+
+def _rand_diag(K):
+    return np.exp(1j * rng.uniform(0, 2 * np.pi, K)).astype(np.complex64)
+
+
+def _mats_for(plan, gates):
+    mats = []
+    for (vq, diag), g in zip(plan, gates):
+        m = g if diag else g
+        mats.append(jnp.asarray(np.stack([m.real, m.imag]), jnp.float32))
+    return mats
+
+
+def _run_both(plan, gates, nv, use_kernel=False):
+    """Scheduled planes execution vs gate-by-gate dense application."""
+    amps = (rng.standard_normal(2 ** nv)
+            + 1j * rng.standard_normal(2 ** nv)).astype(np.complex64)
+    want = jnp.asarray(amps)
+    for (vq, diag), g in zip(plan, gates):
+        mat = jnp.asarray(np.diag(g) if diag else g)
+        want = apply_matrix(want, mat, vq, nv)
+    sched = compile_schedule(plan, nv)
+    planes = jnp.asarray(np.stack([amps.real, amps.imag]), jnp.float32)
+    out = execute_schedule(sched, planes, _mats_for(plan, gates),
+                          use_kernel=use_kernel)
+    got = np.asarray(out[0]) + 1j * np.asarray(out[1])
+    np.testing.assert_allclose(got, np.asarray(want), rtol=2e-4, atol=2e-4)
+    return sched
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("seed", range(6))
+def test_random_plans_match_dense(seed, use_kernel):
+    r = np.random.default_rng(seed)
+    nv = int(r.integers(4, 9))
+    plan, gates = [], []
+    for _ in range(int(r.integers(1, 7))):
+        k = int(r.integers(1, min(4, nv) + 1))
+        vq = tuple(int(q) for q in r.choice(nv, size=k, replace=False))
+        diag = bool(r.random() < 0.4)
+        plan.append((vq, diag))
+        gates.append(_rand_diag(2 ** k) if diag else _rand_unitary(2 ** k))
+    _run_both(tuple(plan), gates, nv, use_kernel=use_kernel)
+
+
+def test_diag_gates_never_transpose():
+    """Diagonal unitaries run in any layout: zero transposes, any qubits."""
+    nv = 6
+    plan = tuple(((q, (q + 2) % nv), True) for q in range(4))
+    gates = [_rand_diag(4) for _ in plan]
+    sched = _run_both(plan, gates, nv)
+    assert sched.n_transposes == 0
+    assert all(isinstance(op, DiagOp) for op in sched.ops)
+
+
+def test_identical_qubit_sets_share_layout():
+    """Consecutive dense gates on one qubit set: at most one transpose in,
+    one out — never per gate."""
+    nv = 6
+    vq = (1, 3, 4)
+    plan = tuple((vq, False) for _ in range(5))
+    gates = [_rand_unitary(8) for _ in plan]
+    sched = _run_both(plan, gates, nv)
+    assert sched.n_transposes <= 2
+    assert sched.n_transposes_naive == 2 * len(plan)
+
+
+def test_contiguous_major_block_uses_mid_gemm():
+    """A gate whose axes sit contiguously at the major end (QFT's
+    recurring top-qubit unitaries) runs with zero transposes."""
+    nv = 7
+    vq = (nv - 2, nv - 1)           # axes 0,1 — major-most, ascending order
+    sched = _run_both((((vq), False),), [_rand_unitary(4)], nv)
+    assert sched.n_transposes == 0
+    assert any(isinstance(op, MidGemmOp) for op in sched.ops)
+
+
+def test_minor_block_wrong_bit_order_permutes_matrix():
+    """Gate qubits minor-most but bit-swapped (CX stored target-first):
+    the K x K operand is permuted, not the group array."""
+    nv = 5
+    sched = _run_both((((1, 0), False),), [_rand_unitary(4)], nv)
+    assert sched.n_transposes == 0
+    (op,) = sched.ops
+    assert isinstance(op, GemmOp) and op.bmap == (0, 2, 1, 3)
+
+
+def test_minor_block_canonical_order_no_bmap():
+    nv = 5
+    sched = _run_both((((0, 1), False),), [_rand_unitary(4)], nv)
+    (op,) = sched.ops
+    assert isinstance(op, GemmOp) and op.bmap is None
+    assert sched.n_transposes == 0
+
+
+def test_scattered_axes_still_one_transpose_per_layout_change():
+    """Non-contiguous supports transpose once in and once back out."""
+    nv = 6
+    plan = (((0, 5), False),)
+    sched = _run_both(plan, [_rand_unitary(4)], nv)
+    assert sched.n_transposes == 2
+    kinds = [type(op) for op in sched.ops]
+    assert kinds == [TransposeOp, GemmOp, TransposeOp]
+
+
+def test_qft_like_ladder_halves_transposes():
+    """H + controlled-phase ladder (QFT stage shape): scheduled count is
+    less than half the naive per-gate count."""
+    nv = 6
+    plan, gates = [], []
+    for q in range(4):
+        plan.append(((q,), False))
+        gates.append(_rand_unitary(2))
+        for t in range(q + 1, 5):
+            plan.append(((q, t), True))
+            gates.append(_rand_diag(4))
+    sched = _run_both(tuple(plan), gates, nv)
+    assert sched.n_transposes * 2 <= sched.n_transposes_naive
+
+
+def test_schedule_is_cached():
+    plan = (((0, 1), False), ((2,), True))
+    assert compile_schedule(plan, 5) is compile_schedule(plan, 5)
