@@ -1,0 +1,68 @@
+"""Session reuse + streaming readout (the Simulator API's perf claims).
+
+Two measurements:
+
+* sweep reuse — a parameterized QAOA sweep on ONE session vs rebuilding
+  the engine per point (what `simulate_bmqsim` callers did): the session's
+  later runs skip partitioning and stage-fn/schedule compilation, so
+  `repeat_run_s` should undercut both `first_run_s` and `fresh_engine_s`.
+* readout — sampling and a diagonal expectation streamed from the
+  compressed store, vs the cost of materializing the dense state first.
+
+CPU timings here are noisy (2-3x swings); min-over-reps is reported.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import (EngineConfig, Simulator, maxcut_cost_fn,
+                        maxcut_edges, qaoa_template)
+
+from .common import emit
+
+N = 14
+B = 8
+REPS = 3
+
+
+def main() -> None:
+    template = qaoa_template(N, layers=1)
+    cost = maxcut_cost_fn(maxcut_edges(N))
+    cfg = EngineConfig(local_bits=B, inner_size=2)
+
+    with Simulator(template, cfg) as sim:
+        t0 = time.perf_counter()
+        sim.run(params={"gamma0": 0.4, "beta0": 0.2})
+        first = time.perf_counter() - t0
+        repeat = float("inf")
+        for i in range(REPS):
+            t0 = time.perf_counter()
+            result = sim.run(params={"gamma0": 0.5 + 0.1 * i,
+                                     "beta0": 0.25})
+            repeat = min(repeat, time.perf_counter() - t0)
+        emit("session", "first_run_s", first)
+        emit("session", "repeat_run_s", repeat)
+        emit("session", "stagefn_compiles", sim.stats.n_stagefn_compiles)
+        emit("session", "stagefn_cache_hits", sim.stats.n_stagefn_cache_hits)
+
+        t0 = time.perf_counter()
+        result.sample(1024, seed=0)
+        emit("session", "sample_1024_s", time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        result.expectation(cost)
+        emit("session", "expect_s", time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        result.statevector()
+        emit("session", "statevector_s", time.perf_counter() - t0)
+
+    # baseline: a fresh engine per sweep point (pre-session API pattern);
+    # the global stage-fn lru is warm from above, so the remaining gap is
+    # partition + fusion + operand staging per call
+    fresh = float("inf")
+    for i in range(REPS):
+        bound = template.bind({"gamma0": 0.5 + 0.1 * i, "beta0": 0.25})
+        t0 = time.perf_counter()
+        with Simulator(bound, cfg) as sim:
+            sim.run()
+        fresh = min(fresh, time.perf_counter() - t0)
+    emit("session", "fresh_engine_s", fresh)

@@ -1,11 +1,16 @@
-"""Quickstart: compressed state-vector simulation in ~20 lines.
+"""Quickstart: a compressed simulation session in ~20 lines.
+
+The session never materializes the 2^n state: samples, expectation
+values, and single amplitudes stream straight from the compressed
+block store (`statevector()` is the explicit opt-out, used here only to
+score fidelity against the dense reference at this small n).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (EngineConfig, build_circuit, fidelity,
-                        simulate_bmqsim, simulate_dense)
+from repro import (EngineConfig, Simulator, build_circuit, fidelity,
+                   simulate_dense)
 
 
 def main():
@@ -13,7 +18,13 @@ def main():
     cfg = EngineConfig(local_bits=8,                 # SV block = 256 amps
                        inner_size=2,                 # Algorithm 1 threshold
                        b_r=1e-3)                     # point-wise rel. bound
-    state, stats = simulate_bmqsim(qc, cfg)
+    with Simulator(qc, cfg) as sim:
+        result = sim.run()
+        stats = sim.stats
+
+        counts = result.sample(1024)                 # streamed readout
+        amp0 = result.amplitudes([0])[0]             # one block decoded
+        state = result.statevector()                 # opt-in: 2^14 is tiny
 
     ideal = np.asarray(simulate_dense(qc))
     print(f"circuit            : qft, n=14, {stats.n_gates} gates")
@@ -24,6 +35,8 @@ def main():
     print(f"peak memory        : {stats.peak_total_bytes/2**20:.2f} MiB "
           f"(standard: {stats.standard_bytes/2**20:.1f} MiB, "
           f"{stats.memory_reduction:.1f}x less)")
+    print(f"readout            : {len(counts)} distinct outcomes in 1024 "
+          f"shots, |<0|psi>| = {abs(amp0):.6f}")
 
 
 if __name__ == "__main__":

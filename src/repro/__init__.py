@@ -9,34 +9,48 @@ over a two-level RAM/disk store (§4.4).
 
 Public API (the stable surface; everything else is internal layering):
 
-    Circuits     build_circuit, random_circuit, Circuit, Gate
-    Simulation   simulate_bmqsim, EngineConfig, SimStats, simulate_dense
+    Circuits     build_circuit, random_circuit, qaoa_template, Circuit,
+                 Gate, Parameter
+    Sessions     Simulator, SimResult, EngineConfig, SimStats
+    One-shot     simulate_bmqsim (compat wrapper), simulate_dense
     Metrics      fidelity, max_pointwise_rel_error
     Compression  PwRelParams, compress_complex_block,
                  decompress_complex_block, BlockSegments, BlockStore
 
-Quickstart::
+Quickstart — a session that never materializes the 2^n state::
 
-    from repro import EngineConfig, build_circuit, simulate_bmqsim
-    state, stats = simulate_bmqsim(build_circuit("qft", 14),
-                                   EngineConfig(local_bits=8))
+    from repro import EngineConfig, Simulator, build_circuit
+
+    with Simulator(build_circuit("qft", 14),
+                   EngineConfig(local_bits=8)) as sim:
+        result = sim.run()
+        counts = result.sample(1024)        # streams the compressed store
+        amp0 = result.amplitudes([0])[0]
+
+``simulate_bmqsim(circuit, config)`` remains as the one-shot compat
+wrapper returning ``(dense_state, stats)``; prefer :class:`Simulator`,
+which reuses the partition and compiled stage schedules across runs
+(parameter sweeps) and reads observables from the compressed blocks.
 """
 from .compression import (  # noqa: F401
     BlockSegments, BlockStore, CompressedBlock, PwRelParams,
     compress_complex_block, decompress_complex_block,
 )
 from .core import (  # noqa: F401
-    BMQSimEngine, Circuit, EngineConfig, Gate, SimStats, build_circuit,
-    fidelity, max_pointwise_rel_error, random_circuit, simulate_bmqsim,
-    simulate_dense,
+    BMQSimEngine, Circuit, EngineConfig, Gate, Parameter, SimResult,
+    SimStats, Simulator, build_circuit, fidelity, max_pointwise_rel_error,
+    maxcut_cost_fn, maxcut_edges, qaoa_template, random_circuit,
+    simulate_bmqsim, simulate_dense,
 )
 
 __all__ = [
     # circuits
-    "Circuit", "Gate", "build_circuit", "random_circuit",
-    # simulation
-    "simulate_bmqsim", "BMQSimEngine", "EngineConfig", "SimStats",
-    "simulate_dense",
+    "Circuit", "Gate", "Parameter", "build_circuit", "random_circuit",
+    "qaoa_template", "maxcut_edges", "maxcut_cost_fn",
+    # sessions
+    "Simulator", "SimResult", "EngineConfig", "SimStats",
+    # one-shot + internals kept public
+    "simulate_bmqsim", "BMQSimEngine", "simulate_dense",
     # metrics
     "fidelity", "max_pointwise_rel_error",
     # compression
@@ -44,4 +58,4 @@ __all__ = [
     "decompress_complex_block", "BlockSegments", "BlockStore",
 ]
 
-__version__ = "0.2.0"
+__version__ = "0.3.0"

@@ -23,12 +23,17 @@ other keys aliased to the same blob.
 from __future__ import annotations
 
 import itertools
+import json
 import os
+import struct
 import tempfile
 import threading
 from dataclasses import dataclass
 
 from .segments import BlockSegments
+
+_SNAP_MAGIC = b"BMQSNAP1"
+_SNAP_HEAD = struct.Struct("<Q")   # header JSON length
 
 
 @dataclass
@@ -209,6 +214,78 @@ class BlockStore:
 
     def keys(self):
         return sorted(self._key2blob)
+
+    # -- checkpointing ---------------------------------------------------------
+    def snapshot(self, path: str, meta: dict | None = None) -> None:
+        """Serialize every key to one checkpoint file (atomic via rename).
+
+        Alias structure is preserved: keys sharing a blob (the §4.2
+        zero-block trick) serialize the blob once and restore shared.
+        ``meta`` is an opaque caller dict (the engine's layout/codec
+        manifest) stored alongside and handed back by :meth:`restore`.
+        """
+        with self._lock:
+            key2blob = dict(self._key2blob)
+        blob_order: list[int] = []
+        blob_pos: dict[int, int] = {}
+        keys = []
+        for key in sorted(key2blob):
+            bid = key2blob[key]
+            if bid not in blob_pos:
+                blob_pos[bid] = len(blob_order)
+                blob_order.append(bid)
+            keys.append([key, blob_pos[bid]])
+        blobs: list[bytes] = []
+        for bid in blob_order:
+            with self._lock:
+                blob = self._ram.get(bid)
+                disk_path = None if blob is not None else self._disk[bid]
+            if blob is not None:
+                blobs.append(_blob_bytes(blob))
+            else:
+                with open(disk_path, "rb") as f:
+                    blobs.append(f.read())
+        header = json.dumps({
+            "meta": meta or {},
+            "keys": keys,
+            "blob_sizes": [len(b) for b in blobs],
+        }).encode()
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(_SNAP_MAGIC)
+            f.write(_SNAP_HEAD.pack(len(header)))
+            f.write(header)
+            for b in blobs:
+                f.write(b)
+        os.replace(tmp, path)
+
+    @classmethod
+    def restore(cls, path: str, ram_budget_bytes: int | None = None,
+                spill_dir: str | None = None) -> tuple["BlockStore", dict]:
+        """Rebuild a store from a :meth:`snapshot` file -> (store, meta).
+
+        Blobs land in the RAM tier as serialized bytes (``get_block``
+        re-parses structured blocks lazily); the usual budget/spill rules
+        apply, so a snapshot larger than ``ram_budget_bytes`` restores
+        with overflow on the disk tier.
+        """
+        with open(path, "rb") as f:
+            magic = f.read(len(_SNAP_MAGIC))
+            if magic != _SNAP_MAGIC:
+                raise ValueError(f"{path}: not a BMQSIM checkpoint "
+                                 f"(bad magic {magic!r})")
+            (hlen,) = _SNAP_HEAD.unpack(f.read(_SNAP_HEAD.size))
+            header = json.loads(f.read(hlen).decode())
+            blobs = [f.read(sz) for sz in header["blob_sizes"]]
+        store = cls(ram_budget_bytes=ram_budget_bytes, spill_dir=spill_dir)
+        first_key: dict[int, int] = {}
+        for key, blob_idx in header["keys"]:
+            if blob_idx in first_key:
+                store.put_alias(key, first_key[blob_idx])
+            else:
+                store.put(key, blobs[blob_idx])
+                first_key[blob_idx] = key
+        return store, header["meta"]
 
     def close(self) -> None:
         if self._tmp is not None:

@@ -1,5 +1,5 @@
 """BMQSIM core: the paper's contribution (compressed staged SV simulation)."""
-from .circuit import Circuit, Gate  # noqa: F401
+from .circuit import Circuit, Gate, Parameter  # noqa: F401
 from .dense_engine import (  # noqa: F401
     apply_matrix, initial_state, simulate_dense, simulate_dense_sharded,
 )
@@ -7,11 +7,16 @@ from .engine import BMQSimEngine, EngineConfig, SimStats, simulate_bmqsim  # noq
 from .fidelity import fidelity, max_pointwise_rel_error, norm  # noqa: F401
 from .fusion import FusedGate, fuse_gates, gates_to_unitary  # noqa: F401
 from .groups import GroupLayout, expand_bits  # noqa: F401
-from .library import CIRCUIT_BUILDERS, build_circuit, random_circuit  # noqa: F401
+from .library import (  # noqa: F401
+    CIRCUIT_BUILDERS, build_circuit, maxcut_cost_fn, maxcut_edges,
+    qaoa_template, random_circuit,
+)
 from .partition import Partition, Stage, partition_circuit  # noqa: F401
 from .pipeline import (  # noqa: F401
     CodecBackend, DeviceCodecBackend, HostCodecBackend, StagePipeline,
     make_backend,
 )
 from .measure import block_probabilities, expect_diagonal, sample_counts  # noqa: F401
+from .result import SimResult  # noqa: F401
 from .schedule import StageSchedule, compile_schedule, execute_schedule  # noqa: F401
+from .simulator import Simulator, circuit_fingerprint  # noqa: F401

@@ -1,12 +1,46 @@
-"""Circuit IR: a flat list of Gate ops over n qubits (little-endian)."""
+"""Circuit IR: a flat list of Gate ops over n qubits (little-endian).
+
+Circuits may be *parameterized*: any gate angle can be a
+:class:`Parameter` placeholder instead of a float.  A parameterized gate
+defers its matrix (``matrix is None``) until :meth:`Gate.bind` /
+:meth:`Circuit.bind` substitutes concrete values — the structural fields
+(name, qubits) are always present, so partitioning and scheduling work on
+the unbound template while the numeric unitaries are produced per binding
+(the :class:`~repro.core.simulator.Simulator` session exploits this to
+re-run e.g. a QAOA ansatz at many angles without re-partitioning).
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Iterable, Sequence
+from typing import Iterable, Mapping, Sequence
 
 import numpy as np
 
 from . import gates as G
+
+__all__ = ["Parameter", "Gate", "Circuit"]
+
+
+@dataclass(frozen=True)
+class Parameter:
+    """A named placeholder for a gate angle, resolved at bind time."""
+
+    name: str
+
+    def __repr__(self) -> str:
+        return f"Parameter({self.name!r})"
+
+
+def _resolve(params: tuple, values: Mapping[str, float]) -> tuple[float, ...]:
+    out = []
+    for p in params:
+        if isinstance(p, Parameter):
+            if p.name not in values:
+                raise KeyError(f"no value bound for parameter {p.name!r}")
+            out.append(float(values[p.name]))
+        else:
+            out.append(float(p))
+    return tuple(out)
 
 
 @dataclass(frozen=True)
@@ -14,22 +48,46 @@ class Gate:
     """One gate application.
 
     ``qubits`` is the target tuple; ``qubits[0]`` maps to the least-significant
-    bit of the matrix index (see gates.py conventions).
+    bit of the matrix index (see gates.py conventions).  ``matrix`` is None
+    while any entry of ``params`` is a :class:`Parameter` placeholder.
     """
 
     name: str
     qubits: tuple[int, ...]
-    matrix: np.ndarray
-    params: tuple[float, ...] = ()
+    matrix: np.ndarray | None
+    params: tuple = ()
 
     def __post_init__(self):
         k = len(self.qubits)
-        assert self.matrix.shape == (2 ** k, 2 ** k), (self.name, self.matrix.shape)
         assert len(set(self.qubits)) == k, f"duplicate qubits in {self.name}"
+        if self.is_parameterized:
+            assert self.matrix is None, self.name
+        else:
+            assert self.matrix is not None and \
+                self.matrix.shape == (2 ** k, 2 ** k), \
+                (self.name, None if self.matrix is None else self.matrix.shape)
 
     @property
     def support(self) -> frozenset[int]:
         return frozenset(self.qubits)
+
+    @property
+    def is_parameterized(self) -> bool:
+        return any(isinstance(p, Parameter) for p in self.params)
+
+    @property
+    def free_parameters(self) -> frozenset[str]:
+        return frozenset(p.name for p in self.params
+                         if isinstance(p, Parameter))
+
+    def bind(self, values: Mapping[str, float]) -> "Gate":
+        """Substitute parameter values; returns a concrete gate."""
+        if not self.is_parameterized:
+            return self
+        params = _resolve(self.params, values)
+        mat = np.asarray(G.GATE_FACTORIES[self.name](*params),
+                         dtype=np.complex128)
+        return Gate(self.name, self.qubits, mat, params)
 
 
 @dataclass
@@ -38,12 +96,18 @@ class Circuit:
     gates: list[Gate] = field(default_factory=list)
 
     # -- builder API ---------------------------------------------------------
-    def append(self, name: str, qubits: Sequence[int], *params: float) -> "Circuit":
+    def append(self, name: str, qubits: Sequence[int], *params) -> "Circuit":
         for q in qubits:
             if not 0 <= q < self.n_qubits:
                 raise ValueError(f"qubit {q} out of range for n={self.n_qubits}")
+        if any(isinstance(p, Parameter) for p in params):
+            if name not in G.GATE_FACTORIES:     # fail at append, not bind
+                raise KeyError(f"unknown gate {name!r}")
+            self.gates.append(Gate(name, tuple(qubits), None, tuple(params)))
+            return self
         mat = np.asarray(G.GATE_FACTORIES[name](*params), dtype=np.complex128)
-        self.gates.append(Gate(name, tuple(qubits), mat, tuple(params)))
+        self.gates.append(Gate(name, tuple(qubits), mat,
+                               tuple(float(p) for p in params)))
         return self
 
     def h(self, q):            return self.append("h", [q])
@@ -67,6 +131,33 @@ class Circuit:
     def swap(self, a, b_):     return self.append("swap", [a, b_])
     def rzz(self, th, a, b_):  return self.append("rzz", [a, b_], th)
     def rxx(self, th, a, b_):  return self.append("rxx", [a, b_], th)
+
+    # -- parameter binding ---------------------------------------------------
+    @property
+    def free_parameters(self) -> frozenset[str]:
+        """Names of all unbound :class:`Parameter` placeholders."""
+        out: set[str] = set()
+        for g in self.gates:
+            if g.is_parameterized:
+                out |= g.free_parameters
+        return frozenset(out)
+
+    @property
+    def is_parameterized(self) -> bool:
+        return any(g.is_parameterized for g in self.gates)
+
+    def bind(self, values: Mapping[str, float]) -> "Circuit":
+        """Return a concrete circuit with every placeholder substituted.
+
+        ``values`` must cover :attr:`free_parameters`; unknown names raise
+        (a typo silently leaving a parameter unbound is the failure mode
+        this guards against).
+        """
+        unknown = set(values) - self.free_parameters
+        if unknown:
+            raise KeyError(f"unknown parameter(s) {sorted(unknown)}; "
+                           f"circuit has {sorted(self.free_parameters)}")
+        return Circuit(self.n_qubits, [g.bind(values) for g in self.gates])
 
     # -- properties ----------------------------------------------------------
     def __len__(self) -> int:

@@ -26,6 +26,7 @@ transpose/apply/inverse-transpose pattern.
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from functools import lru_cache
 
@@ -36,16 +37,20 @@ import numpy as np
 from ..compression.pwrel import PwRelParams
 from ..compression.store import BlockStore
 from ..kernels.ops import default_interpret
-from .circuit import Circuit
+from .circuit import Circuit, Gate
 from .dense_engine import apply_matrix
 from .fusion import FusedGate, fuse_gates
 from .groups import GroupLayout
 from .partition import Partition, partition_circuit
 from .pipeline import (StagePipeline, complex_to_planes, make_backend,
                        planes_to_complex)
+from .result import collect_statevector
 from .schedule import compile_schedule, execute_schedule
 
 __all__ = ["EngineConfig", "SimStats", "BMQSimEngine", "simulate_bmqsim"]
+
+#: parameter bindings whose fused operands stay resident per engine
+_BOUND_CACHE_SIZE = 8
 
 
 @dataclass
@@ -117,11 +122,22 @@ class SimStats:
     ``n_transposes_naive`` / ``n_transposes_scheduled`` count full-group
     transposes (per group execution) under the per-gate scheme vs the
     compiled stage schedule — both are recorded whichever path ran.
+
+    ``n_stagefn_compiles`` counts stage structures this engine
+    instantiated for the first time; ``n_stagefn_cache_hits`` counts
+    stage executions that reused one.  A parameter sweep on one session
+    must show zero new compiles after the first run (the Simulator API's
+    reuse contract); counters accumulate across ``n_runs`` runs.  (The
+    jitted functions additionally dedup across engines via a
+    process-global cache — these counters are deliberately per-engine.)
     """
 
     n_qubits: int = 0
     n_gates: int = 0
     n_stages: int = 0
+    n_runs: int = 0
+    n_stagefn_compiles: int = 0
+    n_stagefn_cache_hits: int = 0
     n_fused_unitaries: int = 0
     n_block_compressions: int = 0
     n_block_decompressions: int = 0
@@ -249,14 +265,16 @@ class BMQSimEngine:
     need to poke at engine internals between construction and run.
     """
 
-    def __init__(self, circuit: Circuit, config: EngineConfig):
+    def __init__(self, circuit: Circuit, config: EngineConfig,
+                 *, store: BlockStore | None = None):
         self.circuit = circuit
         self.cfg = config
         self.n = circuit.n_qubits
         self.b = min(config.local_bits, self.n)
         self.params = PwRelParams(b_r=config.b_r)
-        self.store = BlockStore(ram_budget_bytes=config.ram_budget_bytes,
-                                spill_dir=config.spill_dir)
+        self.store = store if store is not None else BlockStore(
+            ram_budget_bytes=config.ram_budget_bytes,
+            spill_dir=config.spill_dir)
         self.stats = SimStats(n_qubits=self.n, n_gates=len(circuit))
         self.backend = make_backend(
             config.codec_backend, self.store, self.params, 2 ** self.b,
@@ -277,19 +295,64 @@ class BMQSimEngine:
         self.stats.t_partition = time.perf_counter() - t0
         self.stats.n_stages = self.partition.n_stages
 
-        # per-stage: layout + fused gates remapped to virtual qubits
-        self._stages: list[tuple[GroupLayout, list[FusedGate]]] = []
+        # per-stage: layout + the stage's (possibly parameterized) gate
+        # templates; fusion + operand staging happen per parameter binding
+        # in _bind_stages and are cached per binding, so a sweep revisits
+        # neither the partition nor previously-bound unitaries
+        self._stages: list[tuple[GroupLayout, list[Gate]]] = []
         for st in self.partition.stages:
             layout = GroupLayout(self.n, self.b, tuple(st.inner))
-            fused = fuse_gates(st.gates, config.max_fused_qubits)
-            vgates = [
-                FusedGate(layout.remap_qubits(fg.qubits), fg.matrix)
-                for fg in fused
-            ]
-            self.stats.n_fused_unitaries += len(vgates)
-            self._stages.append((layout, vgates))
+            self._stages.append((layout, st.gates))
+        self._free_params = circuit.free_parameters
+        # LRU-bounded: an optimizer loop feeding ever-new angles must not
+        # grow the session's memory with one operand set per evaluation
+        self._bound: OrderedDict[tuple, list] = OrderedDict()
+        self._seen_stagefns: set[tuple] = set()
+        if not self._free_params:
+            self._bind_stages(None)   # eager, like the pre-session engine
 
         self._devices = config.devices or [jax.devices()[0]]
+
+    # -- parameter binding -----------------------------------------------------
+    @staticmethod
+    def _params_key(params: dict | None) -> tuple:
+        if not params:
+            return ()
+        return tuple(sorted((str(k), float(v)) for k, v in params.items()))
+
+    def _bind_stages(self, params: dict | None) -> list:
+        """Fuse + remap + stage the per-gate operands for one parameter
+        binding -> cached list of (layout, plan, mats) per stage."""
+        key = self._params_key(params)
+        cached = self._bound.get(key)
+        if cached is not None:
+            self._bound.move_to_end(key)
+            return cached
+        given = set(params or {})
+        missing = self._free_params - given
+        if missing:
+            raise ValueError(
+                f"circuit has unbound parameters {sorted(missing)}; "
+                "pass values via run(params={...})")
+        unknown = given - self._free_params
+        if unknown:
+            raise KeyError(f"unknown parameter(s) {sorted(unknown)}; "
+                           f"circuit has {sorted(self._free_params)}")
+        bound = []
+        for layout, gates in self._stages:
+            concrete = [g.bind(params) if g.is_parameterized else g
+                        for g in gates]
+            fused = fuse_gates(concrete, self.cfg.max_fused_qubits)
+            vgates = [FusedGate(layout.remap_qubits(fg.qubits), fg.matrix)
+                      for fg in fused]
+            plan = tuple((fg.qubits, fg.is_diagonal) for fg in vgates)
+            mats = _stage_mats(vgates, plan, self.cfg.gate_schedule)
+            self.stats.n_fused_unitaries += len(vgates)
+            bound.append((layout, plan, mats))
+        self._bound[key] = bound
+        while len(self._bound) > _BOUND_CACHE_SIZE:
+            self._bound.popitem(last=False)
+        return bound
 
     # -- initialization (§4.2 trick) -----------------------------------------
     def _init_state(self) -> None:
@@ -305,18 +368,33 @@ class BMQSimEngine:
         self.stats.n_block_compressions += min(n_blocks, 2)
 
     # -- main loop -------------------------------------------------------------
-    def run(self, collect_state: bool = True) -> np.ndarray | None:
+    def run(self, collect_state: bool = True, params: dict | None = None,
+            start_stage: int = 0, on_stage_done=None) -> np.ndarray | None:
         """Execute the circuit through the staged pipeline.
+
+        Repeated ``run()`` calls on one engine re-execute from |0...0>,
+        reusing the partition, the compiled stage functions, and (per
+        distinct ``params``) the fused unitaries; stats accumulate.
 
         Args:
             collect_state: decompress and return the final 2^n state
                 (set False for memory benchmarks at large n).
+            params: values for the circuit's free :class:`Parameter`
+                placeholders (required iff the circuit is parameterized).
+            start_stage: first stage index to execute — nonzero only when
+                resuming from a checkpoint whose store already holds the
+                state after ``start_stage`` stages (skips |0..0> init).
+            on_stage_done: optional ``callback(stage_idx)`` invoked after
+                each stage's store barrier (checkpoint hook).
 
         Returns:
             The final complex64 state vector, or None.
         """
         t_start = time.perf_counter()
-        self._init_state()
+        bound = self._bind_stages(params)
+        self.stats.n_runs += 1
+        if start_stage == 0:
+            self._init_state()
         pipe = StagePipeline(self.backend, depth=self.cfg.pipeline_depth,
                              devices=self._devices)
         # snapshot the backend's lifetime counters so repeated run() calls
@@ -325,13 +403,15 @@ class BMQSimEngine:
         h2d0, d2h0 = back.h2d_bytes, back.d2h_bytes
         dec0, com0 = back.n_decompressions, back.n_compressions
         with pipe:
-            for layout, vgates in self._stages:
-                if not vgates:
+            for idx, (layout, plan, mats) in enumerate(bound):
+                if idx < start_stage or not plan:
                     continue
                 sh2d, sd2h = back.h2d_bytes, back.d2h_bytes
-                self._run_stage(pipe, layout, vgates)
+                self._run_stage(pipe, layout, plan, mats)
                 self.stats.per_stage_boundary_bytes.append(
                     (back.h2d_bytes - sh2d, back.d2h_bytes - sd2h))
+                if on_stage_done is not None:
+                    on_stage_done(idx)
         self.stats.t_decompress += pipe.t_load
         self.stats.t_compute += pipe.t_compute
         self.stats.t_fetch += pipe.t_fetch
@@ -340,18 +420,26 @@ class BMQSimEngine:
         self.stats.d2h_bytes += back.d2h_bytes - d2h0
         self.stats.n_block_decompressions += back.n_decompressions - dec0
         self.stats.n_block_compressions += back.n_compressions - com0
-        self.stats.t_total = time.perf_counter() - t_start
+        self.stats.t_total += time.perf_counter() - t_start
         self._snap_store_stats()
         if collect_state:
             return self._collect()
         return None
 
     def _run_stage(self, pipe: StagePipeline, layout: GroupLayout,
-                   vgates: list[FusedGate]) -> None:
+                   plan: tuple, mats: list) -> None:
         nv = layout.b + layout.m
-        plan = tuple((fg.qubits, fg.is_diagonal) for fg in vgates)
-        fn = _stage_fn(plan, nv, self.cfg.use_kernel,
-                       self.cfg.gate_schedule, default_interpret())
+        # stage-function reuse accounting (engine-local, so other engines
+        # warming the process-global cache can't skew a session's stats):
+        # a sweep must show zero new compiles after its first run
+        key = (plan, nv, self.cfg.use_kernel, self.cfg.gate_schedule,
+               default_interpret())
+        if key in self._seen_stagefns:
+            self.stats.n_stagefn_cache_hits += 1
+        else:
+            self._seen_stagefns.add(key)
+            self.stats.n_stagefn_compiles += 1
+        fn = _stage_fn(*key)
         # transpose accounting: both counters are recorded whichever path
         # executes, so the scheduled/naive ratio is always reportable
         sched = compile_schedule(plan, nv)
@@ -359,7 +447,6 @@ class BMQSimEngine:
             sched.n_transposes_naive * layout.n_groups
         self.stats.n_transposes_scheduled += \
             sched.n_transposes * layout.n_groups
-        mats = _stage_mats(vgates, plan, self.cfg.gate_schedule)
         pipe.run_stage(layout.group_block_ids(), fn, mats)
 
     def _snap_store_stats(self) -> None:
@@ -370,10 +457,7 @@ class BMQSimEngine:
         self.stats.n_spills = s.n_spills
 
     def _collect(self) -> np.ndarray:
-        n_blocks = 2 ** (self.n - self.b)
-        parts = [self.backend.decode_host_block(blk)
-                 for blk in range(n_blocks)]
-        return np.concatenate(parts)
+        return collect_statevector(self.backend, self.n, self.b)
 
     def close(self) -> None:
         self.store.close()
@@ -382,6 +466,16 @@ class BMQSimEngine:
 def simulate_bmqsim(circuit: Circuit, config: EngineConfig,
                     collect_state: bool = True):
     """Simulate ``circuit`` with the compressed staged engine.
+
+    .. deprecated::
+        This is the one-shot compat wrapper.  Prefer the session API —
+        :class:`~repro.core.simulator.Simulator` /
+        :class:`~repro.core.result.SimResult` — which keeps the compiled
+        stage schedules alive across runs and reads samples, expectation
+        values, and amplitudes straight from the compressed store instead
+        of materializing the 2^n state.  ``collect_state=False`` returns
+        ``(None, stats)`` and throws the compressed final state away;
+        ``Simulator.run()`` returns a readout handle over it instead.
 
     Args:
         circuit: the :class:`~repro.core.circuit.Circuit` to run.

@@ -11,9 +11,10 @@ import math
 
 import numpy as np
 
-from .circuit import Circuit
+from .circuit import Circuit, Parameter
 
-__all__ = ["build_circuit", "CIRCUIT_BUILDERS", "random_circuit"]
+__all__ = ["build_circuit", "CIRCUIT_BUILDERS", "random_circuit",
+           "maxcut_edges", "maxcut_cost_fn", "qaoa_template"]
 
 
 def cat_state(n: int) -> Circuit:
@@ -145,16 +146,11 @@ def qsvm(n: int, reps: int = 2) -> Circuit:
 
 
 def qaoa(n: int, layers: int = 2) -> Circuit:
-    """QAOA MaxCut on a deterministic pseudo-random 3-regular-ish graph."""
+    """QAOA MaxCut with fixed pseudo-random angles on the same graph as
+    :func:`qaoa_template` (score it with
+    ``maxcut_cost_fn(maxcut_edges(n))``)."""
     rng = np.random.default_rng(23 * n + layers)
-    edges: set[tuple[int, int]] = set()
-    for q in range(n):
-        edges.add((q, (q + 1) % n))  # ring backbone
-    extra = max(1, n // 2)
-    while len(edges) < n + extra:
-        a, b_ = rng.integers(0, n, size=2)
-        if a != b_:
-            edges.add((min(int(a), int(b_)), max(int(a), int(b_))))
+    edges = maxcut_edges(n)
 
     qc = Circuit(n)
     for q in range(n):
@@ -166,6 +162,64 @@ def qaoa(n: int, layers: int = 2) -> Circuit:
             qc.rzz(gamma, a, b_)
         for q in range(n):
             qc.rx(2.0 * beta, q)
+    return qc
+
+
+def maxcut_edges(n: int, seed: int | None = None) -> list[tuple[int, int]]:
+    """Deterministic pseudo-random 3-regular-ish MaxCut graph on n nodes
+    (ring backbone + chords) — the graph behind :func:`qaoa_template`
+    and :func:`qaoa`."""
+    if n < 2:
+        raise ValueError(f"MaxCut needs >= 2 nodes, got {n}")
+    rng = np.random.default_rng(29 * n + 5 if seed is None else seed)
+    edges: set[tuple[int, int]] = set()
+    for q in range(n):
+        if q != (q + 1) % n:
+            edges.add((min(q, (q + 1) % n), max(q, (q + 1) % n)))
+    # chord target capped at C(n,2): small graphs saturate every pair
+    target = min(n + max(1, n // 2), n * (n - 1) // 2)
+    while len(edges) < target:
+        a, b_ = rng.integers(0, n, size=2)
+        if a != b_:
+            edges.add((min(int(a), int(b_)), max(int(a), int(b_))))
+    return sorted(edges)
+
+
+def maxcut_cost_fn(edges: list[tuple[int, int]]):
+    """Vectorized diagonal MaxCut observable: cut size per basis index.
+
+    Returns ``diag_fn(indices) -> values`` suitable for
+    :meth:`SimResult.expectation` / :func:`measure.expect_diagonal`.
+    """
+    def diag_fn(idx):
+        idx = np.asarray(idx, dtype=np.int64)
+        acc = np.zeros(idx.shape, dtype=np.float64)
+        for (a, b_) in edges:
+            acc += ((idx >> a) & 1) ^ ((idx >> b_) & 1)
+        return acc
+    return diag_fn
+
+
+def qaoa_template(n: int, layers: int = 1) -> Circuit:
+    """Parameterized QAOA MaxCut ansatz over :func:`maxcut_edges`.
+
+    Layer ``l`` exposes :class:`Parameter` placeholders ``gamma{l}`` (cost
+    angle) and ``beta{l}`` (mixer angle); bind or pass them per run::
+
+        sim = Simulator(qaoa_template(18, layers=1), cfg)
+        r = sim.run(params={"gamma0": 0.8, "beta0": 0.4})
+    """
+    edges = maxcut_edges(n)
+    qc = Circuit(n)
+    for q in range(n):
+        qc.h(q)
+    for l in range(layers):
+        gamma = Parameter(f"gamma{l}")
+        beta = Parameter(f"beta{l}")
+        for (a, b_) in edges:
+            qc.rzz(gamma, a, b_)
+        for q in range(n):
+            qc.rx(beta, q)
     return qc
 
 

@@ -1,60 +1,39 @@
-"""Measurement sampling from a COMPRESSED state (memory-conscious readout).
+"""Measurement readout from a COMPRESSED state — legacy free functions.
 
-The paper's engine exists so states too big to materialize can be
-simulated; reading results out must honor the same constraint.  Sampling
-bitstrings therefore streams the store block-by-block:
+.. deprecated::
+    These engine-taking wrappers predate the session API; the
+    implementation lives in :mod:`repro.core.result` and is reachable as
+    :class:`SimResult` methods (``result.sample(...)``,
+    ``result.expectation(...)``, ``result.block_probabilities()``), which
+    is the stable surface.  Kept for callers holding a bare
+    :class:`BMQSimEngine`.
 
-  pass 1: decompress each SV block once -> probability mass per block
-          (2^c floats — tiny), build the block-level CDF;
-  pass 2: multinomial over blocks, then decompress ONLY the blocks that
-          received samples and sample local indices within them.
-
-Peak extra memory is one block, matching the engine's working set.
-Expectation values of diagonal observables (e.g. computational-basis
-energies for QAOA) stream the same way.
+All readers stream the store block-by-block: peak extra memory is one
+decoded SV block, matching the engine's working set.  When the lossy
+tail drifts the total probability mass beyond tolerance, the readout
+renormalizes and emits a ``RuntimeWarning``.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from .engine import BMQSimEngine
+from .result import (stream_block_masses, stream_expectation,
+                     stream_sample)
 
 __all__ = ["sample_counts", "block_probabilities", "expect_diagonal"]
 
 
 def block_probabilities(engine: BMQSimEngine) -> np.ndarray:
     """(2^c,) probability mass per SV block (one streaming pass)."""
-    n_blocks = 2 ** (engine.n - engine.b)
-    masses = np.empty(n_blocks, np.float64)
-    for blk in range(n_blocks):
-        amps = engine.backend.decode_host_block(blk)
-        masses[blk] = float(np.sum(np.abs(amps) ** 2))
-    return masses
+    return stream_block_masses(engine.backend, engine.n, engine.b)
 
 
 def sample_counts(engine: BMQSimEngine, n_shots: int,
                   seed: int = 0) -> dict[int, int]:
     """Sample ``n_shots`` computational-basis outcomes -> {index: count}."""
-    rng = np.random.default_rng(seed)
-    masses = block_probabilities(engine)
-    total = masses.sum()
-    if not np.isclose(total, 1.0, atol=1e-2):
-        masses = masses / total          # renormalize lossy tail
-    else:
-        masses = masses / total
-    per_block = rng.multinomial(n_shots, masses)
-    counts: dict[int, int] = {}
-    bsz = 2 ** engine.b
-    for blk in np.nonzero(per_block)[0]:
-        amps = engine.backend.decode_host_block(int(blk))
-        p = np.abs(amps) ** 2
-        p = p / p.sum()
-        idx = rng.choice(bsz, size=int(per_block[blk]), p=p)
-        base = int(blk) << engine.b
-        for i in idx:
-            key = base | int(i)
-            counts[key] = counts.get(key, 0) + 1
-    return counts
+    return stream_sample(engine.backend, engine.n, engine.b, n_shots,
+                         seed=seed)
 
 
 def expect_diagonal(engine: BMQSimEngine, diag_fn) -> float:
@@ -63,12 +42,4 @@ def expect_diagonal(engine: BMQSimEngine, diag_fn) -> float:
     ``diag_fn(indices) -> values``: vectorized diagonal entries for global
     basis indices (e.g. a QAOA MaxCut cost function).
     """
-    bsz = 2 ** engine.b
-    n_blocks = 2 ** (engine.n - engine.b)
-    local = np.arange(bsz, dtype=np.int64)
-    acc = 0.0
-    for blk in range(n_blocks):
-        amps = engine.backend.decode_host_block(blk)
-        vals = diag_fn((blk << engine.b) | local)
-        acc += float(np.sum((np.abs(amps) ** 2) * vals))
-    return acc
+    return stream_expectation(engine.backend, engine.n, engine.b, diag_fn)

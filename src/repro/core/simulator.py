@@ -1,0 +1,284 @@
+"""Simulator: a persistent session around the compressed engine.
+
+The one-shot :func:`simulate_bmqsim` call re-partitions the circuit and
+rebuilds every stage schedule per invocation, and its only readout is the
+dense 2^n state — which defeats the memory budget the engine exists to
+honor.  The session API fixes both ends:
+
+    sim = Simulator(qaoa_template(24, layers=1), EngineConfig(local_bits=16))
+    r1 = sim.run(params={"gamma0": 0.8, "beta0": 0.4})
+    e1 = r1.expectation(maxcut_cost_fn(maxcut_edges(24)))
+    r2 = sim.run(params={"gamma0": 1.1, "beta0": 0.7})   # NO recompilation
+    counts = r2.sample(4096)                              # streams blocks
+
+* **Construction** performs the §4.1 partition once.  Every ``run()``
+  reuses it, plus the compiled stage functions and transpose-minimizing
+  schedules (cached on stage *structure*, which parameter values don't
+  change) — ``SimStats.n_stagefn_compiles`` must not grow after the first
+  run of a sweep.
+* **Readout** returns a :class:`~repro.core.result.SimResult` handle over
+  the compressed store; sampling/expectations/amplitudes stream
+  block-by-block with ~one decoded block of peak extra memory.
+* **Checkpointing**: ``result.save(path)`` serializes the compressed
+  blocks + layout; :meth:`Simulator.resume` reopens them — readout-only
+  (no circuit needed), or with the circuit to continue an interrupted
+  run from the last checkpointed stage
+  (``run(checkpoint_path=..., checkpoint_every=k)``).
+"""
+from __future__ import annotations
+
+import hashlib
+
+from ..compression.pwrel import PwRelParams
+from ..compression.store import BlockStore
+from ..kernels.ops import default_interpret
+from .circuit import Circuit
+from .engine import BMQSimEngine, EngineConfig, SimStats
+from .pipeline import make_backend
+from .result import SimResult
+
+__all__ = ["Simulator", "circuit_fingerprint"]
+
+_CKPT_KIND = "bmqsim-checkpoint"
+_CKPT_VERSION = 1
+
+
+def circuit_fingerprint(circuit: Circuit) -> str:
+    """Structural hash of a circuit template (gate names, qubits, params —
+    :class:`Parameter` placeholders hash by name, so one template yields
+    one fingerprint across bindings)."""
+    h = hashlib.sha1()
+    h.update(str(circuit.n_qubits).encode())
+    for g in circuit.gates:
+        h.update(g.name.encode())
+        h.update(repr(g.qubits).encode())
+        h.update(repr(g.params).encode())
+    return h.hexdigest()
+
+
+class Simulator:
+    """A simulation session: one partition, many runs, streaming readout.
+
+    Use as a context manager (owns the block store)::
+
+        with Simulator(circuit, config) as sim:
+            result = sim.run()
+            counts = result.sample(1024)
+
+    A session is either *engine-backed* (constructed from a circuit, can
+    ``run()``) or *readout-only* (``Simulator.resume(path)`` without a
+    circuit: the checkpointed final state is readable, re-running needs
+    the circuit).
+    """
+
+    def __init__(self, circuit: Circuit, config: EngineConfig,
+                 *, _store: BlockStore | None = None):
+        self._engine: BMQSimEngine | None = \
+            BMQSimEngine(circuit, config, store=_store)
+        self._backend = self._engine.backend
+        self.n_qubits = self._engine.n
+        self.local_bits = self._engine.b
+        self._meta: dict | None = None
+        self._generation = 0
+        self._last: SimResult | None = None
+        self._start_stage = 0          # nonzero after a partial resume
+        self._resume_params: dict | None = None
+        self._closed = False
+
+    # -- session lifecycle -----------------------------------------------------
+    def __enter__(self) -> "Simulator":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._generation += 1          # invalidate outstanding handles
+        if self._engine is not None:
+            self._engine.close()
+        else:
+            self._backend.store.close()
+
+    @property
+    def stats(self) -> SimStats | None:
+        """Cumulative counters/timings across every run of this session
+        (None for a readout-only resumed session)."""
+        return self._engine.stats if self._engine is not None else None
+
+    @property
+    def circuit(self) -> Circuit | None:
+        return self._engine.circuit if self._engine is not None else None
+
+    # -- execution -------------------------------------------------------------
+    def run(self, params: dict | None = None, *,
+            checkpoint_path: str | None = None,
+            checkpoint_every: int = 0) -> SimResult:
+        """Execute the circuit; returns a readout handle over the final
+        compressed state.
+
+        Args:
+            params: values for the circuit's free parameters (required iff
+                the circuit template is parameterized).  Re-running with
+                new values reuses the partition, compiled stage functions
+                and schedules; only the fused gate operands are rebuilt
+                (and cached per binding).
+            checkpoint_path: with ``checkpoint_every=k``, snapshot the
+                store + progress every k stages so an interrupted run can
+                :meth:`resume` from the last completed checkpoint.
+            checkpoint_every: checkpoint period in stages (0 = never).
+
+        Returns:
+            A live :class:`SimResult`; invalidated by the next ``run()``
+            or :meth:`close` (persist with ``result.save(path)``).
+        """
+        if self._closed:
+            raise RuntimeError("Simulator is closed")
+        if self._engine is None:
+            raise RuntimeError(
+                "readout-only session (resumed without a circuit); pass "
+                "circuit= to Simulator.resume to re-run or continue")
+        if self._start_stage > 0:
+            # continuing a partial checkpoint: the already-executed stages
+            # were bound with the checkpointed params — a different
+            # binding for the remaining stages would produce a state no
+            # single parameter setting generates
+            if params is None:
+                params = self._resume_params
+            elif (BMQSimEngine._params_key(params)
+                  != BMQSimEngine._params_key(self._resume_params)):
+                raise ValueError(
+                    "cannot continue a partial checkpoint with different "
+                    f"params: checkpointed {self._resume_params!r}, "
+                    f"given {params!r}")
+        start = self._start_stage
+        self._start_stage = 0
+        self._resume_params = None
+        self._generation += 1          # old handles read overwritten blocks
+        on_stage_done = None
+        if checkpoint_path and checkpoint_every > 0:
+            def on_stage_done(idx: int) -> None:
+                if (idx + 1) % checkpoint_every == 0:
+                    self._save_checkpoint(checkpoint_path,
+                                          stages_done=idx + 1,
+                                          run_params=params)
+        self._engine.run(collect_state=False, params=params,
+                         start_stage=start, on_stage_done=on_stage_done)
+        self._last = SimResult(self._backend, self.n_qubits, self.local_bits,
+                               stats=self._engine.stats, owner=self,
+                               generation=self._generation)
+        return self._last
+
+    def result(self) -> SimResult:
+        """The latest run's (or resumed checkpoint's) readout handle."""
+        if self._last is None:
+            raise RuntimeError("no result yet: call run() first")
+        return self._last
+
+    # -- checkpointing ---------------------------------------------------------
+    def _manifest(self, stages_done: int, run_params: dict | None) -> dict:
+        if self._engine is not None:
+            cfg = self._engine.cfg
+            return {
+                "kind": _CKPT_KIND, "version": _CKPT_VERSION,
+                "n_qubits": self.n_qubits, "local_bits": self.local_bits,
+                "inner_size": cfg.inner_size, "b_r": cfg.b_r,
+                "compression": cfg.compression, "prescan": cfg.prescan,
+                "stages_done": stages_done,
+                "n_stages": self._engine.partition.n_stages,
+                "fingerprint": circuit_fingerprint(self._engine.circuit),
+                "run_params": run_params,
+            }
+        return dict(self._meta)        # readout-only: re-save as loaded
+
+    def _save_checkpoint(self, path: str, stages_done: int | None = None,
+                         run_params: dict | None = None) -> None:
+        if stages_done is None and self._engine is not None:
+            stages_done = self._engine.partition.n_stages
+        self._backend.store.snapshot(
+            path, meta=self._manifest(stages_done, run_params))
+
+    @classmethod
+    def resume(cls, path: str, circuit: Circuit | None = None,
+               config: EngineConfig | None = None) -> "Simulator":
+        """Reopen a checkpoint written by ``result.save`` / mid-run
+        checkpointing.
+
+        Without ``circuit``: a readout-only session over the checkpointed
+        (complete) final state — ``sim.result()`` streams it.  With
+        ``circuit`` (+ optionally ``config``): a full session whose store
+        is the checkpoint; a partial checkpoint continues from the first
+        unfinished stage on the next ``run()``, a complete one exposes
+        ``result()`` immediately.
+        """
+        store, meta = BlockStore.restore(
+            path,
+            ram_budget_bytes=config.ram_budget_bytes if config else None,
+            spill_dir=config.spill_dir if config else None)
+        if meta.get("kind") != _CKPT_KIND:
+            store.close()
+            raise ValueError(f"{path}: not a {_CKPT_KIND} file")
+        complete = meta["stages_done"] == meta["n_stages"]
+
+        if circuit is None:
+            if not complete:
+                store.close()
+                raise ValueError(
+                    f"{path} is a partial checkpoint "
+                    f"({meta['stages_done']}/{meta['n_stages']} stages); "
+                    "pass the circuit to continue the run")
+            sim = cls.__new__(cls)
+            sim._engine = None
+            sim._backend = make_backend(
+                "host", store, PwRelParams(b_r=meta["b_r"]),
+                2 ** meta["local_bits"], compression=meta["compression"],
+                prescan=meta["prescan"], interpret=default_interpret())
+            sim.n_qubits = meta["n_qubits"]
+            sim.local_bits = meta["local_bits"]
+            sim._meta = meta
+            sim._generation = 1
+            sim._start_stage = 0
+            sim._resume_params = None
+            sim._closed = False
+            sim._last = SimResult(sim._backend, sim.n_qubits, sim.local_bits,
+                                  owner=sim, generation=1)
+            return sim
+
+        if circuit_fingerprint(circuit) != meta["fingerprint"]:
+            store.close()
+            raise ValueError(
+                f"{path}: circuit does not match the checkpointed one "
+                "(structural fingerprint mismatch)")
+        if config is None:
+            config = EngineConfig(local_bits=meta["local_bits"],
+                                  inner_size=meta["inner_size"],
+                                  b_r=meta["b_r"],
+                                  compression=meta["compression"],
+                                  prescan=meta["prescan"])
+        else:
+            for attr in ("local_bits", "inner_size", "b_r", "compression",
+                         "prescan"):
+                if getattr(config, attr) != meta[attr]:
+                    store.close()
+                    raise ValueError(
+                        f"{path}: config.{attr}={getattr(config, attr)!r} "
+                        f"!= checkpointed {meta[attr]!r}")
+        sim = cls(circuit, config, _store=store)
+        if sim._engine.partition.n_stages != meta["n_stages"]:
+            sim.close()
+            raise ValueError(
+                f"{path}: partition produced "
+                f"{sim._engine.partition.n_stages} stages but checkpoint "
+                f"recorded {meta['n_stages']}")
+        sim._meta = meta
+        if complete:
+            sim._generation = 1
+            sim._last = SimResult(sim._backend, sim.n_qubits, sim.local_bits,
+                                  stats=sim._engine.stats, owner=sim,
+                                  generation=1)
+        else:
+            sim._start_stage = meta["stages_done"]
+            sim._resume_params = meta.get("run_params")
+        return sim

@@ -1,15 +1,28 @@
 """Quantum-simulation launcher (the paper's own workload at scale):
-BMQSIM engine over all host devices with a RAM budget + disk tier.
+BMQSIM session over all host devices with a RAM budget + disk tier, plus
+compressed-store readout — the 2^n state is never materialized.
 
     PYTHONPATH=src python -m repro.launch.qsim --circuit qft --qubits 20 \
-        --block-bits 14 [--ram-mb 64]
+        --block-bits 14 [--ram-mb 64] [--shots 1024] [--expect zsum] \
+        [--save ck.bmq | --resume ck.bmq]
 """
 import argparse
 
 import jax
 import numpy as np
 
-from ..core import EngineConfig, build_circuit, simulate_bmqsim
+from ..core import EngineConfig, Simulator, build_circuit
+
+
+def _zsum(n: int):
+    """Diagonal <sum_i Z_i>: n minus twice the popcount of each index."""
+    def diag_fn(idx):
+        idx = np.asarray(idx, dtype=np.int64)
+        pop = np.zeros(idx.shape, dtype=np.int64)
+        for k in range(n):
+            pop += (idx >> k) & 1
+        return (n - 2 * pop).astype(np.float64)
+    return diag_fn
 
 
 def main(argv=None):
@@ -36,35 +49,68 @@ def main(argv=None):
                     help="disable the transpose-minimizing stage schedule "
                          "and run the per-gate transpose/apply/inverse "
                          "path (for comparison)")
+    ap.add_argument("--shots", type=int, default=0,
+                    help="sample N bitstrings from the compressed final "
+                         "state (streamed; prints the top-5 outcomes)")
+    ap.add_argument("--expect", default=None, choices=("zsum",),
+                    help="streamed diagonal expectation value: 'zsum' = "
+                         "<sum_i Z_i>")
+    ap.add_argument("--save", default=None, metavar="PATH",
+                    help="checkpoint the compressed final state to PATH")
+    ap.add_argument("--resume", default=None, metavar="PATH",
+                    help="skip simulation; read a saved checkpoint out "
+                         "(readout flags still apply)")
     args = ap.parse_args(argv)
 
-    qc = build_circuit(args.circuit, args.qubits)
-    cfg = EngineConfig(
-        local_bits=args.block_bits, inner_size=args.inner_size,
-        b_r=args.b_r, pipeline_depth=args.pipeline_depth,
-        codec_backend=args.codec_backend,
-        use_kernel=args.use_kernel, gate_schedule=args.gate_schedule,
-        devices=jax.devices(),
-        ram_budget_bytes=(int(args.ram_mb * 2 ** 20)
-                          if args.ram_mb else None))
-    state, stats = simulate_bmqsim(qc, cfg,
-                                   collect_state=args.qubits <= 20)
-    print(f"[qsim] {args.circuit} n={args.qubits}: {stats.n_gates} gates, "
-          f"{stats.n_stages} stages, {stats.n_fused_unitaries} fused")
-    print(f"[qsim] peak {stats.peak_total_bytes/2**20:.1f} MiB "
-          f"({stats.memory_reduction:.1f}x less than standard), "
-          f"spills={stats.n_spills}")
-    print(f"[qsim] total {stats.t_total:.2f}s (decomp {stats.t_decompress:.2f}"
-          f" compute {stats.t_compute:.2f} fetch {stats.t_fetch:.2f}"
-          f" comp {stats.t_compress:.2f})")
-    print(f"[qsim] group transposes: {stats.n_transposes_scheduled} "
-          f"scheduled vs {stats.n_transposes_naive} per-gate")
-    print(f"[qsim] boundary traffic ({args.codec_backend} codec): "
-          f"{stats.h2d_bytes/2**20:.2f} MiB h2d, "
-          f"{stats.d2h_bytes/2**20:.2f} MiB d2h "
-          f"over {stats.n_stages} stages")
-    if state is not None:
-        print(f"[qsim] ||state|| = {np.linalg.norm(state):.6f}")
+    if args.resume:
+        sim = Simulator.resume(args.resume)
+        result = sim.result()
+        n = result.n_qubits
+        print(f"[qsim] resumed {args.resume}: n={n}, "
+              f"local_bits={result.local_bits}")
+    else:
+        n = args.qubits
+        qc = build_circuit(args.circuit, n)
+        cfg = EngineConfig(
+            local_bits=args.block_bits, inner_size=args.inner_size,
+            b_r=args.b_r, pipeline_depth=args.pipeline_depth,
+            codec_backend=args.codec_backend,
+            use_kernel=args.use_kernel, gate_schedule=args.gate_schedule,
+            devices=jax.devices(),
+            ram_budget_bytes=(int(args.ram_mb * 2 ** 20)
+                              if args.ram_mb else None))
+        sim = Simulator(qc, cfg)
+        result = sim.run()
+        stats = sim.stats
+        print(f"[qsim] {args.circuit} n={n}: {stats.n_gates} gates, "
+              f"{stats.n_stages} stages, {stats.n_fused_unitaries} fused")
+        print(f"[qsim] peak {stats.peak_total_bytes/2**20:.1f} MiB "
+              f"({stats.memory_reduction:.1f}x less than standard), "
+              f"spills={stats.n_spills}")
+        print(f"[qsim] total {stats.t_total:.2f}s "
+              f"(decomp {stats.t_decompress:.2f}"
+              f" compute {stats.t_compute:.2f} fetch {stats.t_fetch:.2f}"
+              f" comp {stats.t_compress:.2f})")
+        print(f"[qsim] group transposes: {stats.n_transposes_scheduled} "
+              f"scheduled vs {stats.n_transposes_naive} per-gate")
+        print(f"[qsim] boundary traffic ({args.codec_backend} codec): "
+              f"{stats.h2d_bytes/2**20:.2f} MiB h2d, "
+              f"{stats.d2h_bytes/2**20:.2f} MiB d2h "
+              f"over {stats.n_stages} stages")
+
+    # readout streams the compressed store — one decoded block at a time
+    if args.shots:
+        counts = result.sample(args.shots, seed=0)
+        top = sorted(counts.items(), key=lambda kv: -kv[1])[:5]
+        print(f"[qsim] top-5 of {args.shots} shots: "
+              + ", ".join(f"|{k:0{n}b}>x{v}" for k, v in top))
+    if args.expect == "zsum":
+        val = result.expectation(_zsum(n))
+        print(f"[qsim] <sum Z_i> = {val:.6f}")
+    if args.save:
+        result.save(args.save)
+        print(f"[qsim] checkpoint -> {args.save}")
+    sim.close()
     return 0
 
 

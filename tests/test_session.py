@@ -1,0 +1,315 @@
+"""Session API: Simulator/SimResult — schedule reuse across runs,
+streaming readout correctness + memory bounds, checkpoint round trips,
+parameterized binding."""
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro.core import (Circuit, EngineConfig, Parameter, Simulator,
+                        build_circuit, maxcut_cost_fn, maxcut_edges,
+                        qaoa_template, random_circuit, simulate_dense)
+from repro.compression.pwrel import PwRelParams
+from repro.compression.store import BlockStore
+from repro.core.pipeline import HostCodecBackend
+from repro.core.result import stream_sample
+
+
+# -- schedule reuse (the session's core perf contract) -----------------------
+
+def test_sweep_compiles_stage_fns_exactly_once():
+    """A two-point angle sweep on one session must not compile any stage
+    function after the first run — only score cache hits."""
+    cfg = EngineConfig(local_bits=5)
+    with Simulator(qaoa_template(10, layers=1), cfg) as sim:
+        r1 = sim.run(params={"gamma0": 0.3, "beta0": 0.2})
+        e1 = r1.expectation(maxcut_cost_fn(maxcut_edges(10)))
+        compiles_1 = sim.stats.n_stagefn_compiles
+        hits_1 = sim.stats.n_stagefn_cache_hits
+
+        r2 = sim.run(params={"gamma0": 1.1, "beta0": 0.6})
+        e2 = r2.expectation(maxcut_cost_fn(maxcut_edges(10)))
+        assert sim.stats.n_stagefn_compiles == compiles_1
+        assert sim.stats.n_stagefn_cache_hits > hits_1
+        assert sim.stats.n_runs == 2
+        assert abs(e1 - e2) > 1e-6      # the angles actually changed
+
+
+def test_rerun_same_circuit_reuses_everything():
+    cfg = EngineConfig(local_bits=4)
+    with Simulator(build_circuit("qft", 8), cfg) as sim:
+        sim.run()
+        compiles_1 = sim.stats.n_stagefn_compiles
+        sim.run()
+        assert sim.stats.n_stagefn_compiles == compiles_1
+
+
+# -- readout correctness vs the dense oracle ---------------------------------
+
+@pytest.mark.parametrize("name,shots,tv_bound", [
+    ("ghz_state", 2000, 0.08),     # 2 outcomes: tight statistical bound
+    ("qaoa", 4000, 0.35),          # spread over 2^10: sqrt(K/N)-ish bound
+    ("qft", 4000, 0.40),           # uniform over 2^10 (worst case)
+])
+def test_sample_total_variation_vs_dense(name, shots, tv_bound):
+    qc = build_circuit(name, 10)
+    dense_p = np.abs(np.asarray(simulate_dense(qc),
+                                dtype=np.complex128)) ** 2
+    dense_p = dense_p / dense_p.sum()
+    with Simulator(qc, EngineConfig(local_bits=5)) as sim:
+        counts = sim.run().sample(shots, seed=11)
+    emp = np.zeros(dense_p.size)
+    for k, v in counts.items():
+        emp[k] = v / shots
+    tv = 0.5 * np.abs(emp - dense_p).sum()
+    assert tv < tv_bound, f"{name}: TV={tv:.3f}"
+
+
+def test_amplitudes_match_dense_oracle():
+    """compression=False stores blocks losslessly: amplitudes() equals
+    the dense oracle up to f32 arithmetic, and is always byte-identical
+    to the (opt-in) statevector at the same indices."""
+    qc = random_circuit(8, 24, seed=3)
+    idx = [0, 1, 17, 100, 255, 128, 17]     # dupes + unsorted on purpose
+    dense = np.asarray(simulate_dense(qc), dtype=np.complex64)
+    with Simulator(qc, EngineConfig(local_bits=4,
+                                    compression=False)) as sim:
+        r = sim.run()
+        amps = r.amplitudes(idx)
+        sv = r.statevector()
+    assert np.array_equal(amps, sv[idx])
+    np.testing.assert_allclose(amps, dense[idx], atol=2e-6)
+
+    with Simulator(qc, EngineConfig(local_bits=4)) as sim:   # lossy path
+        r = sim.run()
+        assert np.array_equal(r.amplitudes(idx), r.statevector()[idx])
+        np.testing.assert_allclose(r.amplitudes(idx), dense[idx],
+                                   atol=3e-3)
+
+
+def test_probabilities_marginal_matches_dense():
+    qc = build_circuit("qaoa", 8)
+    dense_p = np.abs(np.asarray(simulate_dense(qc),
+                                dtype=np.complex128)) ** 2
+    qs = [0, 3, 6]      # spans local (b=4) and global qubits
+    idxs = np.arange(dense_p.size)
+    want = np.zeros(2 ** len(qs))
+    midx = np.zeros(idxs.shape, np.int64)
+    for j, q in enumerate(qs):
+        midx |= ((idxs >> q) & 1) << j
+    np.add.at(want, midx, dense_p)
+    with Simulator(qc, EngineConfig(local_bits=4)) as sim:
+        got = sim.run().probabilities(qs)
+    np.testing.assert_allclose(got, want / want.sum(), atol=5e-3)
+    assert abs(got.sum() - 1.0) < 1e-12
+
+
+def test_expectation_matches_dense():
+    qc = build_circuit("qaoa", 9)
+    cost = maxcut_cost_fn(maxcut_edges(9))
+    state = np.asarray(simulate_dense(qc))
+    p = np.abs(state) ** 2
+    want = float(np.sum(p * cost(np.arange(state.size))) / p.sum())
+    with Simulator(qc, EngineConfig(local_bits=4)) as sim:
+        got = sim.run().expectation(cost)
+    assert abs(got - want) < 5e-3
+
+
+# -- readout memory bound ----------------------------------------------------
+
+def test_readout_never_materializes_state():
+    """At n=20 the dense complex64 state is 8 MiB; sample/expectation/
+    amplitudes over the compressed store must stay within a small
+    constant x one 2^10-amplitude block (asserted via tracemalloc, which
+    tracks numpy heap allocations)."""
+    n, b = 20, 10
+    qc = build_circuit("ghz_state", n)
+    with Simulator(qc, EngineConfig(local_bits=b, inner_size=4)) as sim:
+        r = sim.run()
+        tracemalloc.start()
+        counts = r.sample(256, seed=0)
+        r.expectation(lambda idx: np.asarray(idx & 1, np.float64))
+        r.amplitudes([0, 2 ** n - 1])
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+    dense_bytes = 2 ** n * 8
+    block_bytes = 2 ** b * 8
+    assert peak < 64 * block_bytes, \
+        f"readout peak {peak} bytes vs block {block_bytes}"
+    assert peak < dense_bytes / 8
+    assert set(counts) <= {0, 2 ** n - 1}     # GHZ sanity
+
+
+# -- checkpoint / resume -----------------------------------------------------
+
+def test_resume_equals_fresh(tmp_path):
+    path = str(tmp_path / "qft10.bmq")
+    qc = build_circuit("qft", 10)
+    with Simulator(qc, EngineConfig(local_bits=5)) as sim:
+        r = sim.run()
+        fresh_counts = r.sample(500, seed=7)
+        fresh_amps = r.amplitudes([0, 33, 1023])
+        fresh_masses = r.block_probabilities()
+        r.save(path)
+
+    sim2 = Simulator.resume(path)
+    try:
+        r2 = sim2.result()
+        assert r2.n_qubits == 10 and r2.local_bits == 5
+        assert r2.sample(500, seed=7) == fresh_counts
+        assert np.array_equal(r2.amplitudes([0, 33, 1023]), fresh_amps)
+        assert np.array_equal(r2.block_probabilities(), fresh_masses)
+    finally:
+        sim2.close()
+
+
+def test_resume_continues_interrupted_run(tmp_path, monkeypatch):
+    """Checkpoint every stage, die after the 2nd — resuming with the
+    circuit must finish the run and reproduce the uninterrupted state."""
+    path = str(tmp_path / "partial.bmq")
+    qc = build_circuit("qft", 9)
+    cfg = EngineConfig(local_bits=4)
+    with Simulator(qc, cfg) as ref:
+        sv_ref = ref.run().statevector()
+        n_stages = ref.stats.n_stages
+    assert n_stages > 3     # the interruption point must be mid-run
+
+    class Died(Exception):
+        pass
+
+    orig = Simulator._save_checkpoint
+
+    def dying_save(self, p, stages_done=None, run_params=None):
+        orig(self, p, stages_done=stages_done, run_params=run_params)
+        if stages_done == 2:
+            raise Died
+
+    monkeypatch.setattr(Simulator, "_save_checkpoint", dying_save)
+    sim = Simulator(qc, cfg)
+    with pytest.raises(Died):
+        sim.run(checkpoint_path=path, checkpoint_every=1)
+    sim.close()
+    monkeypatch.setattr(Simulator, "_save_checkpoint", orig)
+
+    resumed = Simulator.resume(path, circuit=build_circuit("qft", 9))
+    try:
+        assert resumed._start_stage == 2
+        # the finished stages were bound with the checkpointed params;
+        # a different binding for the tail must be refused
+        with pytest.raises(ValueError, match="different"):
+            resumed.run(params={"bogus": 1.0})
+        sv = resumed.run().statevector()
+    finally:
+        resumed.close()
+    assert np.array_equal(sv, sv_ref)
+
+
+def test_resume_rejects_mismatches(tmp_path):
+    path = str(tmp_path / "ck.bmq")
+    with Simulator(build_circuit("ghz_state", 8),
+                   EngineConfig(local_bits=4)) as sim:
+        sim.run().save(path)
+
+    with pytest.raises(ValueError, match="fingerprint"):
+        Simulator.resume(path, circuit=build_circuit("qft", 8))
+    with pytest.raises(ValueError, match="local_bits"):
+        Simulator.resume(path, circuit=build_circuit("ghz_state", 8),
+                         config=EngineConfig(local_bits=5))
+    with pytest.raises(ValueError, match="not a"):
+        bad = str(tmp_path / "junk.bmq")
+        with open(bad, "wb") as f:
+            f.write(b"not a checkpoint")
+        BlockStore.restore(bad)
+
+
+# -- handle lifetime ---------------------------------------------------------
+
+def test_stale_result_raises():
+    with Simulator(build_circuit("ghz_state", 8),
+                   EngineConfig(local_bits=4)) as sim:
+        r1 = sim.run()
+        r1.sample(16)                       # live
+        sim.run()
+        with pytest.raises(RuntimeError, match="stale"):
+            r1.sample(16)
+        r2 = sim.result()
+    with pytest.raises(RuntimeError, match="stale"):
+        r2.amplitudes([0])                  # close() invalidates too
+
+
+def test_statevector_is_guarded():
+    with Simulator(build_circuit("ghz_state", 6),
+                   EngineConfig(local_bits=3)) as sim:
+        r = sim.run()
+        r.n_qubits = 30                     # simulate a huge run
+        with pytest.raises(MemoryError, match="force=True"):
+            r.statevector()
+        with pytest.raises(MemoryError, match="qubit subset"):
+            r.probabilities()               # default=all is guarded too
+        r.n_qubits = 6
+
+
+def test_maxcut_edges_small_graphs_terminate():
+    assert maxcut_edges(2) == [(0, 1)]
+    assert maxcut_edges(3) == [(0, 1), (0, 2), (1, 2)]
+    assert len(maxcut_edges(4)) <= 6
+    with pytest.raises(ValueError, match=">= 2 nodes"):
+        maxcut_edges(1)
+
+
+# -- parameterized circuits --------------------------------------------------
+
+def test_parameter_binding():
+    qc = Circuit(2)
+    th = Parameter("theta")
+    qc.h(0).rz(th, 0).cp(th, 0, 1)
+    assert qc.is_parameterized
+    assert qc.free_parameters == {"theta"}
+    assert qc.gates[1].matrix is None
+    bound = qc.bind({"theta": 0.5})
+    assert not bound.is_parameterized
+    assert bound.gates[1].matrix is not None
+    ref = build_circuit("qft", 2)           # just any concrete circuit
+    assert not ref.is_parameterized
+    with pytest.raises(KeyError, match="no value bound"):
+        qc.bind({})
+    with pytest.raises(KeyError, match="unknown"):
+        qc.bind({"theta": 0.5, "phi": 1.0})
+    with pytest.raises(KeyError, match="unknown gate"):
+        Circuit(1).append("nope", [0], Parameter("t"))
+
+
+def test_run_requires_binding():
+    t = qaoa_template(8, layers=1)
+    with Simulator(t, EngineConfig(local_bits=4)) as sim:
+        with pytest.raises(ValueError, match="unbound parameters"):
+            sim.run()
+        with pytest.raises(KeyError, match="unknown"):
+            sim.run(params={"gamma0": 0.1, "beta0": 0.1, "nope": 1.0})
+        sim.run(params={"gamma0": 0.1, "beta0": 0.1})   # now fine
+
+
+def test_bound_template_matches_dense():
+    t = qaoa_template(8, layers=1)
+    params = {"gamma0": 0.7, "beta0": 0.35}
+    dense = np.asarray(simulate_dense(t.bind(params)), np.complex64)
+    with Simulator(t, EngineConfig(local_bits=4)) as sim:
+        sv = sim.run(params=params).statevector()
+    np.testing.assert_allclose(sv, dense, atol=3e-3)
+
+
+# -- lossy-tail drift warning (satellite: sample_counts dead branch) ---------
+
+def test_norm_drift_warns_and_renormalizes():
+    bsz = 16
+    store = BlockStore()
+    backend = HostCodecBackend(store, PwRelParams(b_r=1e-3), bsz)
+    rng = np.random.default_rng(0)
+    state = rng.standard_normal(64) + 1j * rng.standard_normal(64)
+    state = (state / np.linalg.norm(state) * 0.9).astype(np.complex64)
+    for blk in range(4):                    # norm^2 = 0.81: drifted
+        backend.encode_host_block(blk, state[blk * bsz:(blk + 1) * bsz])
+    with pytest.warns(RuntimeWarning, match="renormalizing"):
+        counts = stream_sample(backend, 6, 4, 200, seed=1)
+    assert sum(counts.values()) == 200
+    store.close()
