@@ -9,11 +9,12 @@ from .common import emit
 
 _CODE = """
 import time, jax
-from repro.core import build_circuit, EngineConfig, simulate_bmqsim
+from repro.core import build_circuit, EngineConfig, Simulator
 qc = build_circuit("qft", 14)
 cfg = EngineConfig(local_bits=7, devices=jax.devices())
 t0 = time.perf_counter()
-simulate_bmqsim(qc, cfg, collect_state=False)
+with Simulator(qc, cfg) as sim:
+    sim.run()
 print("T", time.perf_counter() - t0)
 """
 

@@ -1,4 +1,11 @@
-"""Fig. 15: inner size x SV block size -> compression ratio + time."""
+"""Fig. 15: inner size x SV block size -> compression ratio + time, plus
+the planner's budget-driven auto pick over the same workload (what the
+hand grid looks like when ``EngineConfig(local_bits=None,
+memory_budget_bytes=...)`` chooses the knobs instead)."""
+import time
+
+from repro.core import EngineConfig, Simulator, build_circuit
+
 from .common import emit, run_engine
 
 
@@ -11,6 +18,25 @@ def main():
             emit("tuning", f"{key}_ratio", stats.memory_reduction)
             emit("tuning", f"{key}_time_s", t)
             emit("tuning", f"{key}_stages", stats.n_stages)
+
+    # auto-tuned: the planner searches (local_bits, inner_size,
+    # pipeline_depth) under a working-set budget; emit what it chose and
+    # whether the run honored the budget
+    qc = build_circuit("qaoa", 13)
+    for budget_kib in (32, 256):
+        cfg = EngineConfig(memory_budget_bytes=budget_kib * 2 ** 10)
+        with Simulator(qc, cfg) as sim:
+            t0 = time.perf_counter()
+            sim.run()
+            dt = time.perf_counter() - t0
+            key = f"auto_{budget_kib}kib"
+            emit("tuning", f"{key}_local_bits", sim.config.local_bits)
+            emit("tuning", f"{key}_inner_size", sim.config.inner_size)
+            emit("tuning", f"{key}_stages", sim.stats.n_stages)
+            emit("tuning", f"{key}_time_s", dt)
+            emit("tuning", f"{key}_peak_ram_bytes", sim.stats.peak_ram_bytes)
+            emit("tuning", f"{key}_within_budget",
+                 int(sim.stats.peak_ram_bytes <= budget_kib * 2 ** 10))
 
 
 if __name__ == "__main__":

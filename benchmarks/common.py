@@ -10,8 +10,8 @@ import time
 
 import numpy as np
 
-from repro.core import (EngineConfig, build_circuit, fidelity,
-                        simulate_bmqsim, simulate_dense)
+from repro.core import (EngineConfig, Simulator, build_circuit, fidelity,
+                        simulate_dense)
 
 ALL_CIRCUITS = ["cat_state", "cc", "ising", "qft", "bv", "qsvm",
                 "ghz_state", "qaoa"]
@@ -41,10 +41,20 @@ def timed(fn, *args, **kw):
     return out, time.perf_counter() - t0
 
 
-def run_engine(name: str, n: int, **cfg_kw):
+def run_engine(name: str, n: int, collect_state: bool = True, **cfg_kw):
+    """One-shot run through the session API (construction + run timed
+    together, like the deprecated ``simulate_bmqsim`` wrapper it
+    replaced); ``collect_state=False`` skips the dense materialization."""
     qc = build_circuit(name, n)
     cfg = EngineConfig(**cfg_kw)
-    (state, stats), dt = timed(simulate_bmqsim, qc, cfg)
+
+    def once():
+        with Simulator(qc, cfg) as sim:
+            result = sim.run()
+            state = result.statevector() if collect_state else None
+            return state, sim.stats
+
+    (state, stats), dt = timed(once)
     return qc, state, stats, dt
 
 

@@ -12,6 +12,9 @@ Public API (the stable surface; everything else is internal layering):
     Circuits     build_circuit, random_circuit, qaoa_template, Circuit,
                  Gate, Parameter
     Sessions     Simulator, SimResult, EngineConfig, SimStats
+    Planning     ExecutionPlan (Simulator.compile), StagePlan,
+                 PlanPredictions — EngineConfig(local_bits=None,
+                 memory_budget_bytes=...) auto-tunes the knobs
     One-shot     simulate_bmqsim (compat wrapper), simulate_dense
     Metrics      fidelity, max_pointwise_rel_error
     Compression  PwRelParams, compress_complex_block,
@@ -37,10 +40,11 @@ from .compression import (  # noqa: F401
     compress_complex_block, decompress_complex_block,
 )
 from .core import (  # noqa: F401
-    BMQSimEngine, Circuit, EngineConfig, Gate, Parameter, SimResult,
-    SimStats, Simulator, build_circuit, fidelity, max_pointwise_rel_error,
-    maxcut_cost_fn, maxcut_edges, qaoa_template, random_circuit,
-    simulate_bmqsim, simulate_dense,
+    BMQSimEngine, Circuit, EngineConfig, ExecutionPlan, Gate, Parameter,
+    PlanPredictions, SimResult, SimStats, Simulator, StagePlan,
+    build_circuit, fidelity, max_pointwise_rel_error, maxcut_cost_fn,
+    maxcut_edges, qaoa_template, random_circuit, simulate_bmqsim,
+    simulate_dense,
 )
 
 __all__ = [
@@ -49,6 +53,8 @@ __all__ = [
     "qaoa_template", "maxcut_edges", "maxcut_cost_fn",
     # sessions
     "Simulator", "SimResult", "EngineConfig", "SimStats",
+    # planning
+    "ExecutionPlan", "StagePlan", "PlanPredictions",
     # one-shot + internals kept public
     "simulate_bmqsim", "BMQSimEngine", "simulate_dense",
     # metrics

@@ -12,6 +12,8 @@ from .library import (  # noqa: F401
     qaoa_template, random_circuit,
 )
 from .partition import Partition, Stage, partition_circuit  # noqa: F401
+from .plan import ExecutionPlan, PlanPredictions, StagePlan  # noqa: F401
+from .planner import estimate_bytes_per_amp, resolve_config  # noqa: F401
 from .pipeline import (  # noqa: F401
     CodecBackend, DeviceCodecBackend, HostCodecBackend, StagePipeline,
     make_backend,

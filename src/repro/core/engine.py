@@ -27,8 +27,9 @@ from __future__ import annotations
 
 import time
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from functools import lru_cache
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -39,13 +40,15 @@ from ..compression.store import BlockStore
 from ..kernels.ops import default_interpret
 from .circuit import Circuit, Gate
 from .dense_engine import apply_matrix
-from .fusion import FusedGate, fuse_gates
+from .fusion import FusedGate
 from .groups import GroupLayout
-from .partition import Partition, partition_circuit
+from .partition import Partition, Stage, partition_circuit
 from .pipeline import (StagePipeline, complex_to_planes, make_backend,
                        planes_to_complex)
+from .plan import ExecutionPlan, circuit_fingerprint, plan_fingerprint
+from .planner import assemble_plan, fuse_stage, resolve_config
 from .result import collect_statevector
-from .schedule import compile_schedule, execute_schedule
+from .schedule import StageSchedule, compile_schedule, execute_schedule
 
 __all__ = ["EngineConfig", "SimStats", "BMQSimEngine", "simulate_bmqsim"]
 
@@ -59,15 +62,26 @@ class EngineConfig:
 
     Attributes:
         local_bits: ``b`` — an SV block holds 2^b amplitudes; the state
-            splits into 2^(n-b) blocks (§3).
+            splits into 2^(n-b) blocks (§3).  ``None`` means **auto**:
+            the planner (:mod:`repro.core.planner`) chooses it — under
+            ``memory_budget_bytes`` when set, by heuristic otherwise.
         inner_size: max inner global indices per stage — Algorithm 1's
-            threshold; a group is 2^inner_size blocks.
+            threshold; a group is 2^inner_size blocks.  ``None`` = auto
+            (planner default 2, searched when ``local_bits`` is auto and
+            a budget is set).
+        memory_budget_bytes: total working-set budget the planner tunes
+            the knobs against (predicted compressed state + pipeline
+            staging).  Always also flows into the store's
+            ``ram_budget_bytes`` backstop unless one was given, so the
+            run honors the budget even when the compression-ratio
+            estimate was optimistic (spilling to disk instead).
         b_r: point-wise relative error bound of the lossy quantizer (§4.3).
         max_fused_qubits: gate-fusion width (7 => 128x128 MXU tiles on TPU).
         compression: False stores raw complex64 blocks (Fig. 11 baseline).
         prescan: bitmap pre-scan RLE in the lossless stage (§4.3).
         pipeline_depth: decode-ahead / encode-behind worker count (§4.2;
-            the paper's CUDA stream count).
+            the paper's CUDA stream count).  ``None`` = auto (default 2,
+            reduced when the staging working set would break the budget).
         codec_backend: ``"host"`` runs the whole codec on the host and
             moves raw 2^(b+m) complex64 group arrays across the
             host↔device boundary; ``"device"`` runs quantize/dequantize +
@@ -92,14 +106,15 @@ class EngineConfig:
             decompress+recompress sweep per gate (§3).
     """
 
-    local_bits: int
-    inner_size: int = 2
+    local_bits: int | None = None
+    inner_size: int | None = None
     b_r: float = 1e-3
     max_fused_qubits: int = 5
     compression: bool = True
     prescan: bool = True
-    pipeline_depth: int = 2
+    pipeline_depth: int | None = None
     codec_backend: str = "host"
+    memory_budget_bytes: int | None = None
     ram_budget_bytes: int | None = None
     spill_dir: str | None = None
     use_kernel: bool = True
@@ -115,7 +130,14 @@ class SimStats:
     ``h2d_bytes`` / ``d2h_bytes`` count every byte that crossed the
     host↔device boundary through the stage pipeline — the quantity the
     device codec backend shrinks; ``per_stage_boundary_bytes`` records the
-    per-stage (h2d, d2h) pairs for the boundary-traffic benchmarks.
+    per-stage (h2d, d2h) pairs for the boundary-traffic benchmarks.  The
+    list is **reset at the start of every run** (it describes the latest
+    run only — a sweep must not grow it without bound); the scalar byte
+    counters keep accumulating lifetime totals across runs.
+
+    ``bytes_per_amp_measured`` is the achieved stored compression after
+    the first encoded stage of the latest run — the run-time calibration
+    of the planner's ``predicted.bytes_per_amp`` estimate.
 
     ``t_compute`` is dispatch + kernel time only; the blocking wait at the
     d2h boundary is ``t_fetch`` (previously misattributed to compute).
@@ -148,6 +170,7 @@ class SimStats:
     h2d_bytes: int = 0
     d2h_bytes: int = 0
     per_stage_boundary_bytes: list = field(default_factory=list)
+    bytes_per_amp_measured: float = 0.0
     n_transposes_naive: int = 0
     n_transposes_scheduled: int = 0
     t_decompress: float = 0.0
@@ -257,19 +280,70 @@ def _stage_mats(vgates: list[FusedGate],
     ]
 
 
-class BMQSimEngine:
-    """One simulation run: partition, then pipeline every stage (§4).
+class _BoundStage(NamedTuple):
+    """One stage, fully compiled for one parameter binding: everything
+    :meth:`BMQSimEngine.run` needs — built once at bind/plan time, never
+    inside the run loop."""
 
-    Construction performs the §4.1 partition and gate fusion; :meth:`run`
-    executes the staged pipeline.  Use :func:`simulate_bmqsim` unless you
-    need to poke at engine internals between construction and run.
+    layout: GroupLayout
+    plan: tuple                       # ((vqubits, is_diagonal), ...)
+    mats: list                        # binding-specific operands
+    key: tuple                        # stage-fn cache key
+    fn: object                        # jitted planes -> planes update
+    sched: StageSchedule | None       # compiled schedule (None if empty)
+
+
+class BMQSimEngine:
+    """Executor of one circuit's :class:`ExecutionPlan` (§4).
+
+    Construction *plans*: it resolves auto knobs through the planner's
+    cost model (``local_bits=None`` + ``memory_budget_bytes``), performs
+    the §4.1 partition, and — per parameter binding, cached — fuses the
+    gates, compiles the transpose-minimizing schedules and builds the
+    stage-function cache keys.  :meth:`run` is a plain plan walk: no
+    schedule compilation or key construction happens inside it.
+    :meth:`compile` freezes the current binding's decisions into the
+    inspectable :class:`ExecutionPlan` artifact; passing such a plan back
+    via ``plan=`` skips planning and executes it verbatim.
+
+    Use :class:`~repro.core.simulator.Simulator` unless you need to poke
+    at engine internals between construction and run.
     """
 
     def __init__(self, circuit: Circuit, config: EngineConfig,
-                 *, store: BlockStore | None = None):
+                 *, store: BlockStore | None = None,
+                 plan: ExecutionPlan | None = None):
         self.circuit = circuit
-        self.cfg = config
+        self._circuit_fp = circuit_fingerprint(circuit)
         self.n = circuit.n_qubits
+        self._devices = config.devices or [jax.devices()[0]]
+        if plan is not None:
+            if plan.circuit_fp != self._circuit_fp:
+                raise ValueError(
+                    "ExecutionPlan was compiled for a different circuit "
+                    "(structural fingerprint mismatch)")
+            # verbatim execution: every knob the plan records wins over
+            # the config's (devices stay config-side — the plan only
+            # records their count)
+            config = replace(
+                config, local_bits=plan.local_bits,
+                inner_size=plan.inner_size,
+                pipeline_depth=plan.pipeline_depth,
+                b_r=plan.b_r, compression=plan.compression,
+                prescan=plan.prescan, codec_backend=plan.codec_backend,
+                use_kernel=plan.use_kernel,
+                gate_schedule=plan.gate_schedule,
+                max_fused_qubits=plan.max_fused_qubits,
+                memory_budget_bytes=plan.memory_budget_bytes,
+                ram_budget_bytes=(config.ram_budget_bytes
+                                  if config.ram_budget_bytes is not None
+                                  else plan.memory_budget_bytes))
+            self.auto_tuned = plan.auto_tuned
+        pre_part = None
+        if plan is None:
+            config, self.auto_tuned, pre_part = resolve_config(
+                circuit, config, n_devices=len(self._devices))
+        self.cfg = config
         self.b = min(config.local_bits, self.n)
         self.params = PwRelParams(b_r=config.b_r)
         self.store = store if store is not None else BlockStore(
@@ -282,13 +356,38 @@ class BMQSimEngine:
             interpret=default_interpret())
 
         t0 = time.perf_counter()
-        if config.per_gate:
-            from .partition import Stage
+        if plan is not None:
+            # the slices must tile the gate list exactly — a truncated or
+            # overlapping slice (corrupt/hand-edited plan JSON) would
+            # silently simulate a different circuit than circuit_fp attests
+            expect = 0
+            for sp in plan.stages:
+                lo, hi = sp.gate_slice
+                if lo != expect or hi < lo:
+                    raise ValueError(
+                        f"ExecutionPlan stage {sp.index} gate_slice "
+                        f"{sp.gate_slice} does not tile the gate list "
+                        f"(expected start {expect})")
+                expect = hi
+            if expect != len(circuit.gates):
+                raise ValueError(
+                    f"ExecutionPlan covers {expect} gates but the circuit "
+                    f"has {len(circuit.gates)}")
+            stages = [Stage(gates=list(circuit.gates[lo:hi]),
+                            inner=sorted(sp.layout.inner))
+                      for sp in plan.stages
+                      for lo, hi in (sp.gate_slice,)]
+            self.partition = Partition(self.n, self.b, config.inner_size,
+                                       stages)
+            self.partition.validate()
+        elif config.per_gate:
             stages = [Stage(gates=[g],
                             inner=sorted({q for q in g.qubits if q >= self.b}))
                       for g in circuit.gates]
             self.partition = Partition(self.n, self.b, config.inner_size,
                                        stages)
+        elif pre_part is not None:
+            self.partition = pre_part  # the budget search already built it
         else:
             self.partition = partition_circuit(
                 circuit, self.b, config.inner_size)
@@ -296,9 +395,10 @@ class BMQSimEngine:
         self.stats.n_stages = self.partition.n_stages
 
         # per-stage: layout + the stage's (possibly parameterized) gate
-        # templates; fusion + operand staging happen per parameter binding
-        # in _bind_stages and are cached per binding, so a sweep revisits
-        # neither the partition nor previously-bound unitaries
+        # templates; fusion, schedule compilation and operand staging
+        # happen per parameter binding in _bind_stages and are cached per
+        # binding, so a sweep revisits neither the partition nor
+        # previously-bound unitaries
         self._stages: list[tuple[GroupLayout, list[Gate]]] = []
         for st in self.partition.stages:
             layout = GroupLayout(self.n, self.b, tuple(st.inner))
@@ -306,12 +406,13 @@ class BMQSimEngine:
         self._free_params = circuit.free_parameters
         # LRU-bounded: an optimizer loop feeding ever-new angles must not
         # grow the session's memory with one operand set per evaluation
-        self._bound: OrderedDict[tuple, list] = OrderedDict()
+        self._bound: OrderedDict[tuple, list[_BoundStage]] = OrderedDict()
         self._seen_stagefns: set[tuple] = set()
+        # compiled ExecutionPlans, keyed on the binding's stage structure
+        # (parameter *values* don't change it, so a sweep shares one plan)
+        self._plans: dict[tuple, ExecutionPlan] = {}
         if not self._free_params:
             self._bind_stages(None)   # eager, like the pre-session engine
-
-        self._devices = config.devices or [jax.devices()[0]]
 
     # -- parameter binding -----------------------------------------------------
     @staticmethod
@@ -320,9 +421,11 @@ class BMQSimEngine:
             return ()
         return tuple(sorted((str(k), float(v)) for k, v in params.items()))
 
-    def _bind_stages(self, params: dict | None) -> list:
-        """Fuse + remap + stage the per-gate operands for one parameter
-        binding -> cached list of (layout, plan, mats) per stage."""
+    def _bind_stages(self, params: dict | None) -> list[_BoundStage]:
+        """Compile one parameter binding: fuse + remap the gates, stage
+        the operands, compile the schedule and build (and warm) the
+        stage-fn cache key per stage — the plan-time work.  Cached, so
+        :meth:`run` only ever walks the result."""
         key = self._params_key(params)
         cached = self._bound.get(key)
         if cached is not None:
@@ -338,21 +441,57 @@ class BMQSimEngine:
         if unknown:
             raise KeyError(f"unknown parameter(s) {sorted(unknown)}; "
                            f"circuit has {sorted(self._free_params)}")
+        interpret = default_interpret()
         bound = []
         for layout, gates in self._stages:
-            concrete = [g.bind(params) if g.is_parameterized else g
-                        for g in gates]
-            fused = fuse_gates(concrete, self.cfg.max_fused_qubits)
-            vgates = [FusedGate(layout.remap_qubits(fg.qubits), fg.matrix)
-                      for fg in fused]
-            plan = tuple((fg.qubits, fg.is_diagonal) for fg in vgates)
+            vgates, plan = fuse_stage(layout, gates,
+                                      self.cfg.max_fused_qubits, params)
             mats = _stage_mats(vgates, plan, self.cfg.gate_schedule)
             self.stats.n_fused_unitaries += len(vgates)
-            bound.append((layout, plan, mats))
+            nv = layout.b + layout.m
+            fkey = (plan, nv, self.cfg.use_kernel, self.cfg.gate_schedule,
+                    interpret)
+            fn = _stage_fn(*fkey) if plan else None
+            sched = compile_schedule(plan, nv) if plan else None
+            bound.append(_BoundStage(layout, plan, mats, fkey, fn, sched))
         self._bound[key] = bound
         while len(self._bound) > _BOUND_CACHE_SIZE:
             self._bound.popitem(last=False)
         return bound
+
+    # -- the plan artifact -----------------------------------------------------
+    def compile(self, params: dict | None = None) -> ExecutionPlan:
+        """Freeze this engine's compile-time decisions for one binding
+        into an :class:`ExecutionPlan` (cached per stage structure —
+        parameter values don't change it)."""
+        bound = self._bind_stages(params)
+        skey = tuple(bs.plan for bs in bound)
+        pkey = self._params_key(params)
+        plan = self._plans.get(skey)
+        if plan is None:
+            plan = assemble_plan(
+                self._circuit_fp, self.cfg, self.partition,
+                [(bs.layout, bs.plan) for bs in bound],
+                n_devices=len(self._devices),
+                interpret=default_interpret(),
+                params_key=pkey,
+                auto_tuned=self.auto_tuned)
+            self._plans[skey] = plan
+        elif plan.params_key != pkey:
+            # same structure, different binding: the artifact must name
+            # the binding it was asked for, not the first one cached
+            plan = replace(plan, params_key=pkey)
+        return plan
+
+    def plan_fingerprint(self) -> str:
+        """State-layout fingerprint of this engine's plan, computable
+        without a parameter binding (partition + codec knobs only) —
+        identical to ``compile(...).fingerprint``."""
+        return plan_fingerprint(
+            self._circuit_fp, self.n, self.b, self.cfg.inner_size,
+            self.cfg.b_r, self.cfg.compression, self.cfg.prescan,
+            [(tuple(st.inner), len(st.gates))
+             for st in self.partition.stages])
 
     # -- initialization (§4.2 trick) -----------------------------------------
     def _init_state(self) -> None:
@@ -393,6 +532,9 @@ class BMQSimEngine:
         t_start = time.perf_counter()
         bound = self._bind_stages(params)
         self.stats.n_runs += 1
+        # per-run, not lifetime: a parameter sweep must not grow this
+        # list without bound (scalar byte counters keep the totals)
+        self.stats.per_stage_boundary_bytes = []
         if start_stage == 0:
             self._init_state()
         pipe = StagePipeline(self.backend, depth=self.cfg.pipeline_depth,
@@ -402,14 +544,38 @@ class BMQSimEngine:
         back = self.backend
         h2d0, d2h0 = back.h2d_bytes, back.d2h_bytes
         dec0, com0 = back.n_decompressions, back.n_compressions
+        first_done = False
         with pipe:
-            for idx, (layout, plan, mats) in enumerate(bound):
-                if idx < start_stage or not plan:
+            for idx, bs in enumerate(bound):
+                if idx < start_stage or not bs.plan:
                     continue
+                # stage-function reuse accounting (engine-local, so other
+                # engines warming the process-global cache can't skew a
+                # session's stats): a sweep must show zero new compiles
+                # after its first run
+                if bs.key in self._seen_stagefns:
+                    self.stats.n_stagefn_cache_hits += 1
+                else:
+                    self._seen_stagefns.add(bs.key)
+                    self.stats.n_stagefn_compiles += 1
+                # transpose accounting: both counters are recorded
+                # whichever path executes, so the scheduled/naive ratio is
+                # always reportable
+                self.stats.n_transposes_naive += \
+                    bs.sched.n_transposes_naive * bs.layout.n_groups
+                self.stats.n_transposes_scheduled += \
+                    bs.sched.n_transposes * bs.layout.n_groups
                 sh2d, sd2h = back.h2d_bytes, back.d2h_bytes
-                self._run_stage(pipe, layout, plan, mats)
+                pipe.run_stage(bs.layout.group_block_ids(), bs.fn, bs.mats)
                 self.stats.per_stage_boundary_bytes.append(
                     (back.h2d_bytes - sh2d, back.d2h_bytes - sd2h))
+                if not first_done:
+                    # calibrate the planner's compression-ratio estimate
+                    # against the first encoded stage (§4.4: variable
+                    # ratios are only known once real data flows)
+                    first_done = True
+                    self.stats.bytes_per_amp_measured = \
+                        self.store.total_bytes / 2 ** self.n
                 if on_stage_done is not None:
                     on_stage_done(idx)
         self.stats.t_decompress += pipe.t_load
@@ -425,29 +591,6 @@ class BMQSimEngine:
         if collect_state:
             return self._collect()
         return None
-
-    def _run_stage(self, pipe: StagePipeline, layout: GroupLayout,
-                   plan: tuple, mats: list) -> None:
-        nv = layout.b + layout.m
-        # stage-function reuse accounting (engine-local, so other engines
-        # warming the process-global cache can't skew a session's stats):
-        # a sweep must show zero new compiles after its first run
-        key = (plan, nv, self.cfg.use_kernel, self.cfg.gate_schedule,
-               default_interpret())
-        if key in self._seen_stagefns:
-            self.stats.n_stagefn_cache_hits += 1
-        else:
-            self._seen_stagefns.add(key)
-            self.stats.n_stagefn_compiles += 1
-        fn = _stage_fn(*key)
-        # transpose accounting: both counters are recorded whichever path
-        # executes, so the scheduled/naive ratio is always reportable
-        sched = compile_schedule(plan, nv)
-        self.stats.n_transposes_naive += \
-            sched.n_transposes_naive * layout.n_groups
-        self.stats.n_transposes_scheduled += \
-            sched.n_transposes * layout.n_groups
-        pipe.run_stage(layout.group_block_ids(), fn, mats)
 
     def _snap_store_stats(self) -> None:
         s = self.store.stats

@@ -1,0 +1,300 @@
+"""Planner: budget-driven auto-tuning of the simulation knobs (§4.4).
+
+The knobs that decide everything about a run — ``local_bits`` (SV block
+size), ``inner_size`` (Algorithm 1's stage threshold) and
+``pipeline_depth`` — were hand-picked constants.  This module chooses
+them with a cost model under a user-supplied ``memory_budget_bytes``:
+
+    cost      minimize stage count (one decompress/recompress sweep of
+              the whole state each), then group-weighted transposes,
+              then prefer larger blocks (bigger GEMMs, fewer boundary
+              round trips)
+    subject   predicted store peak + pipeline staging working set fits
+              the budget
+
+The compression ratio is *estimated* from ``b_r`` (a conservative
+entropy-style model of the pwrel code stream — see
+:func:`estimate_bytes_per_amp`); the engine *calibrates* the estimate
+against the first encoded stage at run time
+(``SimStats.bytes_per_amp_measured``), and the resolved config always
+carries the budget into the two-level store's ``ram_budget_bytes`` as
+the backstop, so a mispredicted ratio spills to disk instead of
+aborting — the store guarantees ``peak_ram_bytes <= budget`` even when
+the model is wrong.
+
+Entry points:
+
+* :func:`resolve_config` — concrete :class:`EngineConfig` from one with
+  ``local_bits=None`` ("auto"); runs the search when a budget is set,
+  falls back to a documented heuristic otherwise.
+* :func:`fuse_stage` — the one place a stage's gates become the
+  structural fused plan the engine keys its caches on (shared with
+  :meth:`BMQSimEngine._bind_stages` so planner and executor can't drift).
+* :func:`assemble_plan` — freeze a bound engine state into an
+  :class:`~repro.core.plan.ExecutionPlan` with predictions.
+"""
+from __future__ import annotations
+
+import math
+import warnings
+from dataclasses import replace
+
+from .fusion import FusedGate, fuse_gates
+from .groups import GroupLayout
+from .partition import partition_circuit
+from .plan import ExecutionPlan, PlanPredictions, StagePlan
+from .schedule import compile_schedule
+
+__all__ = ["DEFAULT_INNER_SIZE", "DEFAULT_PIPELINE_DEPTH",
+           "estimate_bytes_per_amp", "wire_bytes_per_block",
+           "resolve_config", "fuse_stage", "assemble_plan"]
+
+DEFAULT_INNER_SIZE = 2
+DEFAULT_PIPELINE_DEPTH = 2
+
+#: auto search never proposes blocks above 2^20 amplitudes (group arrays
+#: must stay jit-traceable and cache-friendly even with inner_size added)
+MAX_AUTO_LOCAL_BITS = 20
+
+#: per-block constant overhead in the store (headers, dict slots)
+_BLOCK_OVERHEAD = 64
+
+#: inner-size candidates the search sweeps (partition clamps below 2)
+_INNER_CANDIDATES = (2, 3, 4)
+
+#: log2 dynamic range the code stream is assumed to span (typical SV
+#: blocks concentrate within ~2^40 of their max; wider tails quantize to
+#: the exact-zero escape and compress away)
+_SPAN_LOG2 = 40.0
+
+
+def estimate_bytes_per_amp(b_r: float, compression: bool = True) -> float:
+    """Conservatively estimated *stored* bytes per complex amplitude.
+
+    Model: each of the two f32 planes stores a uint16 code stream plus a
+    1-bit sign bitmap.  The codes span roughly ``_SPAN_LOG2 / step``
+    distinct values (``step = 2 log2(1+b_r)``), so an entropy coder needs
+    about ``log2(span/step)`` bits each; zlib level 1 is charged ~2 bits
+    of slack over that.  The RAW escape caps every block at 8 B/amp —
+    compression never inflates — so the estimate is clipped there.
+    Deliberately conservative: real SV blocks (concentrated amplitudes,
+    repeated signs, the all-zero init) compress better, and a *low*
+    estimate is the dangerous direction for a budget guarantee.
+    """
+    if not compression:
+        return 8.0
+    step = 2.0 * math.log2(1.0 + b_r)
+    span_codes = max(2.0, _SPAN_LOG2 / step)
+    code_bits = min(16.0, math.log2(span_codes) + 2.0)
+    per_plane = code_bits / 8.0 + 0.125          # codes + sign bitmap
+    return min(8.0, 2.0 * per_plane)
+
+
+def wire_bytes_per_block(bsz: int, codec_backend: str,
+                         compression: bool) -> int:
+    """Bytes one block moves across the host<->device boundary, one way.
+
+    The device codec ships packed uint16 codes + ballot sign words + an
+    ``l_max`` scalar per plane (~4.25 B/amp); the host backend moves raw
+    complex64 (8 B/amp).
+    """
+    if codec_backend == "device" and compression:
+        return 2 * (2 * bsz + 4 * math.ceil(bsz / 32) + 4)
+    return 8 * bsz
+
+
+def _predict_working_set(n: int, b: int, max_m: int, depth: int,
+                         bpa: float) -> tuple[int, int]:
+    """(store peak, pipeline staging) in bytes for one candidate.
+
+    Store peak: the whole compressed state plus ``depth + 1`` groups'
+    worth of fresh blobs coexisting with the blocks they replace (the
+    store binds the new blob before releasing the old).  Pipeline
+    staging: decoded group arrays held by the decode-ahead workers and
+    the in-flight result — complex64-sized, the host backend's (larger)
+    footprint, so the bound holds for both backends.
+    """
+    n_blocks = 1 << (n - b)
+    state = int((1 << n) * bpa) + n_blocks * _BLOCK_OVERHEAD
+    group = 1 << (b + max_m)
+    peak_ram = state + (depth + 1) * int(group * bpa)
+    pipeline = (depth + 2) * group * 8
+    return peak_ram, pipeline
+
+
+def _default_auto(n: int) -> tuple[int, int, int]:
+    """No-budget heuristic: paper-ish blocks of 2^(n-4) (>= 16 blocks, so
+    stages and groups exist to pipeline), capped at 2^MAX_AUTO_LOCAL_BITS."""
+    b = max(1, min(MAX_AUTO_LOCAL_BITS, n - 4))
+    return b, DEFAULT_INNER_SIZE, DEFAULT_PIPELINE_DEPTH
+
+
+def _transpose_cost(circuit, b: int, m: int, part, max_fused: int) -> int:
+    """Tie-break metric: elements moved by full-group transposes across
+    the whole run (compiled schedule, group-weighted)."""
+    cost = 0
+    for st in part.stages:
+        layout = GroupLayout(circuit.n_qubits, b, tuple(st.inner))
+        _, plan = fuse_stage(layout, st.gates, max_fused)
+        if not plan:
+            continue
+        nv = layout.b + layout.m
+        sched = compile_schedule(plan, nv)
+        cost += sched.n_transposes * layout.n_groups * (1 << nv)
+    return cost
+
+
+def resolve_config(circuit, config, n_devices: int = 1):
+    """Concrete engine knobs from a possibly-auto :class:`EngineConfig`.
+
+    Returns ``(resolved_config, auto_tuned, partition)`` — ``partition``
+    is the winning candidate's (already computed) stage partition when
+    the budget search ran, else ``None`` (the engine partitions itself).
+    ``local_bits=None`` triggers the budget search (or the no-budget
+    heuristic); ``inner_size``/``pipeline_depth`` left ``None`` resolve
+    to their defaults, and ``memory_budget_bytes`` always flows into the
+    store's ``ram_budget_bytes`` backstop unless one was given
+    explicitly.
+    """
+    budget = config.memory_budget_bytes
+    ram_budget = (config.ram_budget_bytes
+                  if config.ram_budget_bytes is not None else budget)
+    if config.local_bits is not None:
+        return replace(
+            config,
+            inner_size=(config.inner_size if config.inner_size is not None
+                        else DEFAULT_INNER_SIZE),
+            pipeline_depth=(config.pipeline_depth
+                            if config.pipeline_depth is not None
+                            else DEFAULT_PIPELINE_DEPTH),
+            ram_budget_bytes=ram_budget), False, None
+
+    n = circuit.n_qubits
+    if budget is None:
+        b, m, depth = _default_auto(n)
+        if config.inner_size is not None:
+            m = config.inner_size
+        if config.pipeline_depth is not None:
+            depth = config.pipeline_depth
+        return replace(config, local_bits=b, inner_size=m,
+                       pipeline_depth=depth,
+                       ram_budget_bytes=ram_budget), True, None
+
+    bpa = estimate_bytes_per_amp(config.b_r, config.compression)
+    inner_cands = ((config.inner_size,) if config.inner_size is not None
+                   else _INNER_CANDIDATES)
+    depth_cands = ((config.pipeline_depth,)
+                   if config.pipeline_depth is not None
+                   else (DEFAULT_PIPELINE_DEPTH, 1))
+    feasible: list[tuple] = []
+    fallback = None                       # least-working-set candidate
+    for b in range(min(n, MAX_AUTO_LOCAL_BITS), 0, -1):
+        for m in inner_cands:
+            eff_m = min(max(m, 2), n - b)     # partition's clamped threshold
+            part = partition_circuit(circuit, b, m)
+            for depth in depth_cands:
+                peak, pipe = _predict_working_set(n, b, eff_m, depth, bpa)
+                cand = (part.n_stages, b, m, depth, peak + pipe, part)
+                if fallback is None or peak + pipe < fallback[4]:
+                    fallback = cand
+                if peak + pipe <= budget:
+                    feasible.append(cand)
+                    break                     # deepest fitting pipeline wins
+
+    if not feasible:
+        n_stages, b, m, depth, ws, part = fallback
+        warnings.warn(
+            f"memory budget {budget} B is below the smallest feasible "
+            f"working set ({ws} B at local_bits={b}); planning the "
+            "smallest candidate and relying on the disk spill tier",
+            RuntimeWarning, stacklevel=3)
+        return replace(config, local_bits=b, inner_size=m,
+                       pipeline_depth=depth,
+                       ram_budget_bytes=ram_budget), True, part
+
+    min_stages = min(c[0] for c in feasible)
+    best = [c for c in feasible if c[0] == min_stages]
+    if len(best) > 1 and not circuit.free_parameters:
+        # transpose tie-break needs concrete matrices; cap the candidates
+        # so plan time stays trivial next to a single stage's compute
+        best = sorted(best, key=lambda c: -c[1])[:6]
+        best = [min(best, key=lambda c: (
+            _transpose_cost(circuit, c[1], c[2], c[5],
+                            config.max_fused_qubits), -c[1], c[2]))]
+    _, b, m, depth, _, part = max(best, key=lambda c: (c[1], -c[2]))
+    return replace(config, local_bits=b, inner_size=m, pipeline_depth=depth,
+                   ram_budget_bytes=ram_budget), True, part
+
+
+def fuse_stage(layout: GroupLayout, gates, max_fused: int,
+               params: dict | None = None):
+    """Fuse one stage's gates and remap onto the group's virtual bits.
+
+    Returns ``(vgates, plan)``: the fused unitaries (matrices bound with
+    ``params`` where parameterized) and the structural
+    ``((vqubits, is_diagonal), ...)`` tuple that keys every downstream
+    cache (stage fns, schedules, plans).
+    """
+    concrete = [g.bind(params) if g.is_parameterized else g for g in gates]
+    fused = fuse_gates(concrete, max_fused)
+    vgates = [FusedGate(layout.remap_qubits(fg.qubits), fg.matrix)
+              for fg in fused]
+    plan = tuple((fg.qubits, fg.is_diagonal) for fg in vgates)
+    return vgates, plan
+
+
+def assemble_plan(circuit_fp: str, cfg, partition, stage_plans,
+                  *, n_devices: int, interpret: bool, params_key: tuple,
+                  auto_tuned: bool) -> ExecutionPlan:
+    """Freeze a bound engine state into an :class:`ExecutionPlan`.
+
+    ``stage_plans`` is ``[(layout, plan_tuple), ...]`` per partition
+    stage (the engine's bound records minus the operand matrices — those
+    belong to a binding, not the plan).
+    """
+    n, b = partition.n_qubits, partition.local_bits
+    bpa = estimate_bytes_per_amp(cfg.b_r, cfg.compression)
+    wire = wire_bytes_per_block(1 << b, cfg.codec_backend, cfg.compression)
+    stages = []
+    gate_lo = 0
+    tot_t = tot_tn = tot_boundary = 0
+    max_m = 0
+    for idx, ((layout, plan), st) in enumerate(
+            zip(stage_plans, partition.stages)):
+        nv = layout.b + layout.m
+        max_m = max(max_m, layout.m)
+        if plan:
+            sched = compile_schedule(plan, nv)
+            n_t, n_tn = sched.n_transposes, sched.n_transposes_naive
+        else:
+            n_t = n_tn = 0
+        stage_bytes = wire * layout.n_groups * layout.blocks_per_group
+        key = (plan, nv, cfg.use_kernel, cfg.gate_schedule, interpret)
+        stages.append(StagePlan(
+            index=idx, layout=layout,
+            gate_slice=(gate_lo, gate_lo + len(st.gates)), plan=plan,
+            stagefn_key=key, n_devices=n_devices,
+            n_transposes=n_t, n_transposes_naive=n_tn,
+            est_h2d_bytes=stage_bytes, est_d2h_bytes=stage_bytes))
+        gate_lo += len(st.gates)
+        tot_t += n_t * layout.n_groups
+        tot_tn += n_tn * layout.n_groups
+        tot_boundary += 2 * stage_bytes
+    peak_ram, pipeline = _predict_working_set(
+        n, b, max_m, cfg.pipeline_depth, bpa)
+    predicted = PlanPredictions(
+        bytes_per_amp=bpa,
+        state_bytes=int((1 << n) * bpa) + (1 << (n - b)) * _BLOCK_OVERHEAD,
+        peak_ram_bytes=peak_ram, pipeline_bytes=pipeline,
+        boundary_bytes=tot_boundary,
+        n_transposes=tot_t, n_transposes_naive=tot_tn)
+    return ExecutionPlan(
+        circuit_fp=circuit_fp, n_qubits=n, local_bits=b,
+        inner_size=cfg.inner_size, pipeline_depth=cfg.pipeline_depth,
+        b_r=cfg.b_r, compression=cfg.compression, prescan=cfg.prescan,
+        codec_backend=cfg.codec_backend, use_kernel=cfg.use_kernel,
+        gate_schedule=cfg.gate_schedule,
+        max_fused_qubits=cfg.max_fused_qubits, interpret=interpret,
+        n_devices=n_devices, memory_budget_bytes=cfg.memory_budget_bytes,
+        auto_tuned=auto_tuned, params_key=params_key,
+        stages=tuple(stages), predicted=predicted)

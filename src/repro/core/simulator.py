@@ -11,11 +11,15 @@ honor.  The session API fixes both ends:
     r2 = sim.run(params={"gamma0": 1.1, "beta0": 0.7})   # NO recompilation
     counts = r2.sample(4096)                              # streams blocks
 
-* **Construction** performs the §4.1 partition once.  Every ``run()``
-  reuses it, plus the compiled stage functions and transpose-minimizing
-  schedules (cached on stage *structure*, which parameter values don't
-  change) — ``SimStats.n_stagefn_compiles`` must not grow after the first
-  run of a sweep.
+* **Construction** plans: auto knobs (``local_bits=None`` +
+  ``memory_budget_bytes``) resolve through the planner's cost model, and
+  the §4.1 partition happens once.  Every ``run()`` reuses it, plus the
+  compiled stage functions and transpose-minimizing schedules (cached on
+  stage *structure*, which parameter values don't change) —
+  ``SimStats.n_stagefn_compiles`` must not grow after the first run of a
+  sweep.  :meth:`Simulator.compile` returns the frozen
+  :class:`~repro.core.plan.ExecutionPlan` artifact without executing
+  anything (``qsim --explain``).
 * **Readout** returns a :class:`~repro.core.result.SimResult` handle over
   the compressed store; sampling/expectations/amplitudes stream
   block-by-block with ~one decoded block of peak extra memory.
@@ -27,7 +31,7 @@ honor.  The session API fixes both ends:
 """
 from __future__ import annotations
 
-import hashlib
+from dataclasses import replace
 
 from ..compression.pwrel import PwRelParams
 from ..compression.store import BlockStore
@@ -35,25 +39,13 @@ from ..kernels.ops import default_interpret
 from .circuit import Circuit
 from .engine import BMQSimEngine, EngineConfig, SimStats
 from .pipeline import make_backend
+from .plan import ExecutionPlan, circuit_fingerprint
 from .result import SimResult
 
 __all__ = ["Simulator", "circuit_fingerprint"]
 
 _CKPT_KIND = "bmqsim-checkpoint"
-_CKPT_VERSION = 1
-
-
-def circuit_fingerprint(circuit: Circuit) -> str:
-    """Structural hash of a circuit template (gate names, qubits, params —
-    :class:`Parameter` placeholders hash by name, so one template yields
-    one fingerprint across bindings)."""
-    h = hashlib.sha1()
-    h.update(str(circuit.n_qubits).encode())
-    for g in circuit.gates:
-        h.update(g.name.encode())
-        h.update(repr(g.qubits).encode())
-        h.update(repr(g.params).encode())
-    return h.hexdigest()
+_CKPT_VERSION = 2
 
 
 class Simulator:
@@ -72,9 +64,10 @@ class Simulator:
     """
 
     def __init__(self, circuit: Circuit, config: EngineConfig,
-                 *, _store: BlockStore | None = None):
+                 *, plan: ExecutionPlan | None = None,
+                 _store: BlockStore | None = None):
         self._engine: BMQSimEngine | None = \
-            BMQSimEngine(circuit, config, store=_store)
+            BMQSimEngine(circuit, config, store=_store, plan=plan)
         self._backend = self._engine.backend
         self.n_qubits = self._engine.n
         self.local_bits = self._engine.b
@@ -111,6 +104,32 @@ class Simulator:
     @property
     def circuit(self) -> Circuit | None:
         return self._engine.circuit if self._engine is not None else None
+
+    @property
+    def config(self) -> EngineConfig | None:
+        """The *resolved* engine config (auto knobs made concrete)."""
+        return self._engine.cfg if self._engine is not None else None
+
+    # -- planning --------------------------------------------------------------
+    def compile(self, params: dict | None = None) -> ExecutionPlan:
+        """Compile (but do not execute) the circuit: returns the
+        :class:`~repro.core.plan.ExecutionPlan` this session will run —
+        per-stage layouts/fused plans/schedules/stage-fn keys plus the
+        planner's working-set and traffic predictions.
+
+        ``params`` is needed iff the circuit template is parameterized
+        (fused structure requires concrete matrices); any binding of one
+        template yields the same plan, which is cached.  The subsequent
+        :meth:`run` executes exactly this plan with zero additional
+        schedule compilation.
+        """
+        if self._closed:
+            raise RuntimeError("Simulator is closed")
+        if self._engine is None:
+            raise RuntimeError(
+                "readout-only session (resumed without a circuit) has "
+                "no plan to compile; pass circuit= to Simulator.resume")
+        return self._engine.compile(params)
 
     # -- execution -------------------------------------------------------------
     def run(self, params: dict | None = None, *,
@@ -153,6 +172,11 @@ class Simulator:
                     "cannot continue a partial checkpoint with different "
                     f"params: checkpointed {self._resume_params!r}, "
                     f"given {params!r}")
+        # validate the binding BEFORE invalidating anything: a bad
+        # params dict must not stale the previous (still intact) result
+        # or discard a partial checkpoint's resume position.  Cached, so
+        # the actual run re-pays nothing.
+        self._engine._bind_stages(params)
         start = self._start_stage
         self._start_stage = 0
         self._resume_params = None
@@ -189,7 +213,12 @@ class Simulator:
                 "stages_done": stages_done,
                 "n_stages": self._engine.partition.n_stages,
                 "fingerprint": circuit_fingerprint(self._engine.circuit),
-                "run_params": run_params,
+                "plan_fingerprint": self._engine.plan_fingerprint(),
+                # JSON-native coercion: optimizer loops hand np.float64
+                # values, which json.dumps inside store.snapshot rejects
+                "run_params": (None if run_params is None else
+                               {str(k): float(v)
+                                for k, v in run_params.items()}),
             }
         return dict(self._meta)        # readout-only: re-save as loaded
 
@@ -258,13 +287,21 @@ class Simulator:
                                   compression=meta["compression"],
                                   prescan=meta["prescan"])
         else:
+            # auto knobs (None) adopt the checkpointed values; explicit
+            # ones must match — the compressed blocks on disk are laid
+            # out for exactly one (local_bits, inner_size) plan
             for attr in ("local_bits", "inner_size", "b_r", "compression",
                          "prescan"):
-                if getattr(config, attr) != meta[attr]:
+                given = getattr(config, attr)
+                if given is None:
+                    continue
+                if given != meta[attr]:
                     store.close()
                     raise ValueError(
-                        f"{path}: config.{attr}={getattr(config, attr)!r} "
+                        f"{path}: config.{attr}={given!r} "
                         f"!= checkpointed {meta[attr]!r}")
+            config = replace(config, local_bits=meta["local_bits"],
+                             inner_size=meta["inner_size"])
         sim = cls(circuit, config, _store=store)
         if sim._engine.partition.n_stages != meta["n_stages"]:
             sim.close()
@@ -272,6 +309,14 @@ class Simulator:
                 f"{path}: partition produced "
                 f"{sim._engine.partition.n_stages} stages but checkpoint "
                 f"recorded {meta['n_stages']}")
+        ckpt_pf = meta.get("plan_fingerprint")
+        if ckpt_pf is not None and sim._engine.plan_fingerprint() != ckpt_pf:
+            sim.close()
+            raise ValueError(
+                f"{path}: incompatible execution plan — the checkpointed "
+                "compressed state was laid out by plan "
+                f"{ckpt_pf[:12]} but this session compiles "
+                f"{sim._engine.plan_fingerprint()[:12]}")
         sim._meta = meta
         if complete:
             sim._generation = 1

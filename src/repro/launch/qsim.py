@@ -3,8 +3,14 @@ BMQSIM session over all host devices with a RAM budget + disk tier, plus
 compressed-store readout — the 2^n state is never materialized.
 
     PYTHONPATH=src python -m repro.launch.qsim --circuit qft --qubits 20 \
-        --block-bits 14 [--ram-mb 64] [--shots 1024] [--expect zsum] \
-        [--save ck.bmq | --resume ck.bmq]
+        [--block-bits 14] [--memory-budget 64] [--explain] [--ram-mb 64] \
+        [--shots 1024] [--expect zsum] [--save ck.bmq | --resume ck.bmq]
+
+``--block-bits`` defaults to **auto**: the planner picks
+``(local_bits, inner_size, pipeline_depth)`` under ``--memory-budget``
+(MiB) when given.  ``--explain`` prints the compiled
+:class:`~repro.core.plan.ExecutionPlan` — stage layouts, predicted
+working set and boundary traffic — and exits without executing a stage.
 """
 import argparse
 
@@ -29,11 +35,23 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--circuit", default="qft")
     ap.add_argument("--qubits", type=int, default=18)
-    ap.add_argument("--block-bits", type=int, default=12)
-    ap.add_argument("--inner-size", type=int, default=2)
+    ap.add_argument("--block-bits", type=int, default=None,
+                    help="b: SV block = 2^b amplitudes (default: auto — "
+                         "the planner chooses under --memory-budget)")
+    ap.add_argument("--inner-size", type=int, default=None,
+                    help="Algorithm 1 stage threshold (default: auto)")
     ap.add_argument("--b-r", type=float, default=1e-3)
+    ap.add_argument("--memory-budget", type=float, default=None,
+                    metavar="MIB",
+                    help="working-set budget the planner tunes "
+                         "(local_bits, inner_size, pipeline_depth) "
+                         "against; also the store's RAM backstop")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the compiled ExecutionPlan (stage "
+                         "layouts, predicted working set/traffic) and "
+                         "exit without executing")
     ap.add_argument("--ram-mb", type=float, default=None)
-    ap.add_argument("--pipeline-depth", type=int, default=2)
+    ap.add_argument("--pipeline-depth", type=int, default=None)
     ap.add_argument("--codec-backend", default="host",
                     choices=("host", "device"),
                     help="where the lossy codec runs; 'device' ships only "
@@ -63,6 +81,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     if args.resume:
+        if args.explain:
+            ap.error("--explain needs a circuit to compile; it cannot be "
+                     "combined with --resume (a checkpoint is a finished "
+                     "state, not a plan)")
         sim = Simulator.resume(args.resume)
         result = sim.result()
         n = result.n_qubits
@@ -77,9 +99,22 @@ def main(argv=None):
             codec_backend=args.codec_backend,
             use_kernel=args.use_kernel, gate_schedule=args.gate_schedule,
             devices=jax.devices(),
+            memory_budget_bytes=(int(args.memory_budget * 2 ** 20)
+                                 if args.memory_budget else None),
             ram_budget_bytes=(int(args.ram_mb * 2 ** 20)
                               if args.ram_mb else None))
         sim = Simulator(qc, cfg)
+        if args.explain:
+            print(sim.compile().describe())
+            sim.close()
+            return 0
+        rcfg = sim.config
+        if args.block_bits is None:
+            print(f"[qsim] planned: local_bits={rcfg.local_bits} "
+                  f"inner_size={rcfg.inner_size} "
+                  f"pipeline_depth={rcfg.pipeline_depth}"
+                  + (f" under {args.memory_budget:g} MiB budget"
+                     if args.memory_budget else " (no budget: heuristic)"))
         result = sim.run()
         stats = sim.stats
         print(f"[qsim] {args.circuit} n={n}: {stats.n_gates} gates, "

@@ -108,6 +108,62 @@ def test_store_spill_and_alias(tmp_path):
     store.close()
 
 
+def test_spilled_alias_refcounting_under_budget(tmp_path):
+    """Budget/spill x put_alias: an aliased blob that spilled to disk
+    survives the overwrite of one aliased key — the other keys keep
+    reading the old bytes off the disk tier, refcounts release the blob
+    only when the last key drops it, and the stats ledgers stay exact."""
+    blob_a = b"a" * 120
+    blob_b = b"b" * 120
+    store = BlockStore(ram_budget_bytes=130, spill_dir=str(tmp_path))
+    store.put(0, blob_a)                 # fits RAM
+    store.put(1, blob_b)                 # exceeds budget -> disk tier
+    assert store.stats.n_spills == 1
+    for k in (2, 3):
+        store.put_alias(k, 1)            # three keys share the spilled blob
+    assert store.stats.disk_bytes == 120     # aliases are zero-copy
+
+    store.put(1, b"n" * 5)               # overwrite one aliased key
+    assert store.get(1) == b"n" * 5
+    for k in (2, 3):                     # survivors still read the old blob
+        assert store.get(k) == blob_b
+    assert store.stats.disk_bytes == 120     # blob alive: 2 refs remain
+
+    store.delete(2)
+    assert store.get(3) == blob_b        # one ref left, still readable
+    assert store.stats.disk_bytes == 120
+    store.delete(3)                      # last ref: file released
+    assert store.stats.disk_bytes == 0
+    assert store.stats.ram_bytes == len(blob_a) + 5
+    assert store.get(0) == blob_a
+    # RAM tier never exceeded its budget through any of the above
+    assert store.stats.peak_ram_bytes <= 130
+    store.close()
+
+
+def test_spilled_structured_alias_roundtrip(tmp_path):
+    """Same refcount semantics for structured blocks: an aliased
+    BlockSegments spilled to disk re-parses identically after the
+    canonical key is overwritten."""
+    rng = np.random.default_rng(9)
+    params = PwRelParams(1e-3)
+    segs = [encode_block_host(
+        (rng.standard_normal(128)
+         + 1j * rng.standard_normal(128)).astype(np.complex64), params)
+        for _ in range(2)]
+    store = BlockStore(ram_budget_bytes=1, spill_dir=str(tmp_path))
+    store.put_block(0, segs[0])          # everything spills (budget ~ 0)
+    store.put_alias(5, 0)
+    assert store.stats.n_spills == 1
+    store.put_block(0, segs[1])          # rebind canonical key
+    got = store.get_block(5)             # alias reads the old spilled blob
+    assert got.re.codes == segs[0].re.codes
+    assert got.im.bitmap == segs[0].im.bitmap
+    np.testing.assert_array_equal(
+        decode_block_host(got, params), decode_block_host(segs[0], params))
+    store.close()
+
+
 def test_store_byte_accounting():
     store = BlockStore()
     store.put(0, b"a" * 100)

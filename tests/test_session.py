@@ -35,6 +35,24 @@ def test_sweep_compiles_stage_fns_exactly_once():
         assert abs(e1 - e2) > 1e-6      # the angles actually changed
 
 
+def test_boundary_bytes_list_is_per_run():
+    """per_stage_boundary_bytes describes the LATEST run only — a sweep
+    must not grow it without bound; lifetime totals stay in the scalar
+    byte counters, which remain the exact sum of the per-stage pairs."""
+    cfg = EngineConfig(local_bits=5)
+    with Simulator(qaoa_template(10, layers=1), cfg) as sim:
+        sim.run(params={"gamma0": 0.3, "beta0": 0.2})
+        first = list(sim.stats.per_stage_boundary_bytes)
+        h2d_1, d2h_1 = sim.stats.h2d_bytes, sim.stats.d2h_bytes
+        assert first and h2d_1 == sum(h for h, _ in first)
+        sim.run(params={"gamma0": 0.9, "beta0": 0.4})
+        second = sim.stats.per_stage_boundary_bytes
+        assert len(second) == len(first)            # reset, not appended
+        # scalars accumulate: lifetime = run1 + exactly the new list
+        assert sim.stats.h2d_bytes == h2d_1 + sum(h for h, _ in second)
+        assert sim.stats.d2h_bytes == d2h_1 + sum(d for _, d in second)
+
+
 def test_rerun_same_circuit_reuses_everything():
     cfg = EngineConfig(local_bits=4)
     with Simulator(build_circuit("qft", 8), cfg) as sim:
@@ -296,6 +314,36 @@ def test_bound_template_matches_dense():
     with Simulator(t, EngineConfig(local_bits=4)) as sim:
         sv = sim.run(params=params).statevector()
     np.testing.assert_allclose(sv, dense, atol=3e-3)
+
+
+def test_failed_run_does_not_stale_previous_result():
+    """A run() rejected at parameter validation must leave the previous
+    result handle readable — the store it reads was never touched."""
+    t = qaoa_template(8, layers=1)
+    with Simulator(t, EngineConfig(local_bits=4)) as sim:
+        r1 = sim.run(params={"gamma0": 0.3, "beta0": 0.2})
+        counts = r1.sample(32, seed=5)
+        with pytest.raises(ValueError, match="unbound"):
+            sim.run()                           # missing params
+        with pytest.raises(KeyError, match="unknown"):
+            sim.run(params={"gamma0": 1.0, "beta0": 0.1, "x": 1.0})
+        assert r1.sample(32, seed=5) == counts  # handle survived
+
+
+def test_checkpoint_accepts_numpy_param_values(tmp_path):
+    """Optimizer loops hand np.float64 angles; mid-run checkpointing
+    must coerce them to JSON-native floats instead of crashing."""
+    path = str(tmp_path / "np.bmq")
+    t = qaoa_template(8, layers=1)
+    with Simulator(t, EngineConfig(local_bits=4)) as sim:
+        sim.run(params={"gamma0": np.float64(0.3),
+                        "beta0": np.float64(0.2)},
+                checkpoint_path=path, checkpoint_every=1)
+    sim2 = Simulator.resume(path)
+    try:
+        assert sim2.result().sample(16, seed=0)
+    finally:
+        sim2.close()
 
 
 # -- lossy-tail drift warning (satellite: sample_counts dead branch) ---------
