@@ -1,6 +1,6 @@
 """Session reuse + streaming readout (the Simulator API's perf claims).
 
-Two measurements:
+Three measurements:
 
 * sweep reuse — a parameterized QAOA sweep on ONE session vs rebuilding
   the engine per point (what `simulate_bmqsim` callers did): the session's
@@ -8,6 +8,11 @@ Two measurements:
   `repeat_run_s` should undercut both `first_run_s` and `fresh_engine_s`.
 * readout — sampling and a diagonal expectation streamed from the
   compressed store, vs the cost of materializing the dense state first.
+* batched execution — `run_batch` with K=8 lanes vs the equivalent
+  sequential loop on the dispatch-bound config (qft-14, local_bits=7):
+  per (stage, group) the batch pays ONE jitted dispatch / boundary
+  crossing for all lanes, so `batch_k8_batched_s` should undercut
+  `batch_k8_looped_s` by most of the per-call overhead.
 
 CPU timings here are noisy (2-3x swings); min-over-reps is reported.
 """
@@ -15,14 +20,19 @@ from __future__ import annotations
 
 import time
 
-from repro.core import (EngineConfig, Simulator, maxcut_cost_fn,
-                        maxcut_edges, qaoa_template)
+from repro.core import (EngineConfig, Simulator, build_circuit,
+                        maxcut_cost_fn, maxcut_edges, qaoa_template)
 
 from .common import emit
 
 N = 14
 B = 8
 REPS = 3
+
+#: the dispatch-bound batching config (small blocks -> many tiny groups)
+BATCH_K = 8
+BATCH_B = 7
+BATCH_REPS = 2
 
 
 def main() -> None:
@@ -66,3 +76,25 @@ def main() -> None:
             sim.run()
         fresh = min(fresh, time.perf_counter() - t0)
     emit("session", "fresh_engine_s", fresh)
+
+    # batched execution: K lanes through run_batch vs K sequential runs
+    # on one warm session (qft-14 / local_bits=7 — dispatch-bound)
+    qc = build_circuit("qft", 14)
+    with Simulator(qc, EngineConfig(local_bits=BATCH_B,
+                                    inner_size=2)) as sim:
+        sim.run()                                  # warm single-lane fns
+        sim.run_batch([None] * BATCH_K)            # warm batched fns
+        batched = float("inf")
+        for _ in range(BATCH_REPS):
+            t0 = time.perf_counter()
+            sim.run_batch([None] * BATCH_K)
+            batched = min(batched, time.perf_counter() - t0)
+        looped = float("inf")
+        for _ in range(BATCH_REPS):
+            t0 = time.perf_counter()
+            for _ in range(BATCH_K):
+                sim.run()
+            looped = min(looped, time.perf_counter() - t0)
+        emit("batch", "qft14_b7_k8_batched_s", batched)
+        emit("batch", "qft14_b7_k8_looped_s", looped)
+        emit("batch", "qft14_b7_k8_speedup", looped / batched)

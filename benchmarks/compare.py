@@ -1,0 +1,193 @@
+"""Benchmark-regression gate: diff two ``BENCH_*.json`` dumps.
+
+    PYTHONPATH=src python -m benchmarks.compare BENCH_4.json BENCH_ci.json
+
+Compares every *keyed timing row* (metric keys ending in ``_s``, i.e. the
+min-over-reps wall-clock rows the benchmarks emit) present in both files
+and exits nonzero when any row slowed down by more than ``--threshold``
+(default 3x — deliberately loose: the CI container's CPU timings swing
+2-3x between runs, so only a real regression clears it).  Rows whose
+baseline is below ``--min-baseline`` seconds (default 0.5) are skipped:
+sub-second rows are dominated by dispatch jitter and observably swing
+past 3x between otherwise-identical runs.
+
+Ratios are *median-normalized* by default: every row's new/old ratio is
+divided by the suite-wide median ratio before gating.  A uniformly slower
+runner (baselines are recorded on whatever container a past PR ran on)
+shifts ALL rows together and must not fail the gate; a genuine regression
+moves one row relative to the rest and still trips it.  ``--absolute``
+disables the normalization.  The blind spot — a change that slows EVERY
+row together (say a disabled fast path) normalizes itself away — is
+bounded by ``--max-median`` (default 10x): a suite median beyond that is
+no longer plausible machine variance and fails outright.
+
+When ``$GITHUB_STEP_SUMMARY`` is set (GitHub Actions), the comparison
+table is appended there as markdown so the ``bench-trajectory`` job shows
+the per-row ratios without digging through artifacts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+
+DEFAULT_THRESHOLD = 3.0
+DEFAULT_MIN_BASELINE = 0.5
+DEFAULT_MAX_MEDIAN = 10.0
+
+
+def load_timing_rows(path: str) -> dict[str, float]:
+    """``bench/section/key -> seconds`` for every ``*_s`` metric row."""
+    with open(path) as fh:
+        report = json.load(fh)
+    rows: dict[str, float] = {}
+    for bench, entry in report.get("benches", {}).items():
+        for section, metrics in entry.get("metrics", {}).items():
+            for key, value in metrics.items():
+                if key.endswith("_s") and isinstance(value, (int, float)):
+                    rows[f"{bench}/{section}/{key}"] = float(value)
+    return rows
+
+
+def compare_rows(
+    baseline: dict[str, float],
+    current: dict[str, float],
+    threshold: float,
+    min_baseline: float,
+    normalize: bool = True,
+) -> tuple[list[tuple[str, float, float, float, bool]], float]:
+    """Shared keyed rows -> ``([(key, old, new, norm_ratio, regressed)],
+    median_ratio)``.
+
+    With ``normalize`` (the default) each raw new/old ratio is divided by
+    the suite-wide median ratio, so a uniformly faster/slower runner
+    cancels out and only relative movement gates.  Keys present on only
+    one side are not comparable (benchmarks come and go across PRs) and
+    are reported separately by :func:`main`.
+    """
+    shared = []
+    for key in sorted(baseline):
+        if key not in current:
+            continue
+        old, new = baseline[key], current[key]
+        if old < min_baseline:
+            continue
+        ratio = new / old if old > 0 else float("inf")
+        shared.append((key, old, new, ratio))
+    median = statistics.median([r for _, _, _, r in shared]) if shared else 1.0
+    scale = median if (normalize and median > 0) else 1.0
+    out = []
+    for key, old, new, ratio in shared:
+        norm = ratio / scale
+        out.append((key, old, new, norm, norm > threshold))
+    return out, median
+
+
+def render_markdown(
+    rows: list[tuple[str, float, float, float, bool]],
+    threshold: float,
+    median: float,
+) -> str:
+    lines = [
+        f"### Benchmark regression gate (threshold {threshold:g}x, "
+        f"suite median ratio {median:.2f}x)",
+        "",
+        "| row | baseline (s) | current (s) | ratio vs median | |",
+        "|---|---:|---:|---:|---|",
+    ]
+    for key, old, new, ratio, regressed in rows:
+        flag = ":x:" if regressed else ""
+        lines.append(f"| `{key}` | {old:.3f} | {new:.3f} | {ratio:.2f}x | {flag} |")
+    if not rows:
+        lines.append("| _no shared timing rows_ | | | | |")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed BENCH_*.json baseline")
+    ap.add_argument("current", help="fresh BENCH_*.json to gate")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=DEFAULT_THRESHOLD,
+        help="fail on new/old above this ratio (default %(default)sx; "
+        "loose because container CPU timings swing 2-3x)",
+    )
+    ap.add_argument(
+        "--min-baseline",
+        type=float,
+        default=DEFAULT_MIN_BASELINE,
+        help="skip rows whose baseline is below this many seconds "
+        "(micro-timings are jitter; default %(default)s)",
+    )
+    ap.add_argument(
+        "--absolute",
+        action="store_true",
+        help="gate on raw new/old ratios instead of median-normalized "
+        "ones (fails on a uniformly slower runner; off by default)",
+    )
+    ap.add_argument(
+        "--max-median",
+        type=float,
+        default=DEFAULT_MAX_MEDIAN,
+        help="fail when the suite-wide median ratio itself exceeds this "
+        "(bounds the normalization blind spot: a uniform suite-wide "
+        "slowdown this large is a regression, not machine variance; "
+        "default %(default)sx)",
+    )
+    args = ap.parse_args(argv)
+
+    baseline = load_timing_rows(args.baseline)
+    current = load_timing_rows(args.current)
+    rows, median = compare_rows(
+        baseline,
+        current,
+        args.threshold,
+        args.min_baseline,
+        normalize=not args.absolute,
+    )
+    table = render_markdown(rows, args.threshold, median)
+    print(table)
+
+    only_base = sorted(set(baseline) - set(current))
+    only_new = sorted(set(current) - set(baseline))
+    if only_base:
+        names = ", ".join(only_base[:8]) + ("..." if len(only_base) > 8 else "")
+        print(f"# {len(only_base)} baseline-only rows (not gated): {names}")
+    if only_new:
+        names = ", ".join(only_new[:8]) + ("..." if len(only_new) > 8 else "")
+        print(f"# {len(only_new)} new rows (no baseline yet): {names}")
+
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a") as fh:
+            fh.write(table + "\n")
+
+    if not args.absolute and rows and median > args.max_median:
+        print(
+            f"REGRESSION suite-wide: median ratio {median:.2f}x exceeds "
+            f"{args.max_median:g}x — every row slowed together, which is "
+            "beyond plausible runner variance",
+            file=sys.stderr,
+        )
+        return 1
+
+    regressions = [r for r in rows if r[4]]
+    if regressions:
+        for key, old, new, ratio, _ in regressions:
+            print(
+                f"REGRESSION {key}: {old:.3f}s -> {new:.3f}s "
+                f"({ratio:.2f}x > {args.threshold:g}x)",
+                file=sys.stderr,
+            )
+        return 1
+    print(f"# OK: {len(rows)} shared timing rows within {args.threshold:g}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,8 +10,11 @@ over a two-level RAM/disk store (§4.4).
 Public API (the stable surface; everything else is internal layering):
 
     Circuits     build_circuit, random_circuit, qaoa_template, Circuit,
-                 Gate, Parameter
-    Sessions     Simulator, SimResult, EngineConfig, SimStats
+                 Gate, Parameter; noise channels via Circuit.depolarize /
+                 with_depolarizing (sampled Pauli trajectories)
+    Sessions     Simulator, SimResult, EngineConfig, SimStats; batched
+                 execution via Simulator.run_batch / run(trajectories=K)
+                 -> BatchResult (per-lane views + trajectory averages)
     Planning     ExecutionPlan (Simulator.compile), StagePlan,
                  PlanPredictions — EngineConfig(local_bits=None,
                  memory_budget_bytes=...) auto-tunes the knobs
@@ -40,11 +43,11 @@ from .compression import (  # noqa: F401
     compress_complex_block, decompress_complex_block,
 )
 from .core import (  # noqa: F401
-    BMQSimEngine, Circuit, EngineConfig, ExecutionPlan, Gate, Parameter,
-    PlanPredictions, SimResult, SimStats, Simulator, StagePlan,
+    BatchResult, BMQSimEngine, Circuit, EngineConfig, ExecutionPlan, Gate,
+    Parameter, PlanPredictions, SimResult, SimStats, Simulator, StagePlan,
     build_circuit, fidelity, max_pointwise_rel_error, maxcut_cost_fn,
     maxcut_edges, qaoa_template, random_circuit, simulate_bmqsim,
-    simulate_dense,
+    simulate_dense, with_depolarizing, zsum_cost_fn,
 )
 
 __all__ = [
@@ -52,7 +55,9 @@ __all__ = [
     "Circuit", "Gate", "Parameter", "build_circuit", "random_circuit",
     "qaoa_template", "maxcut_edges", "maxcut_cost_fn",
     # sessions
-    "Simulator", "SimResult", "EngineConfig", "SimStats",
+    "Simulator", "SimResult", "BatchResult", "EngineConfig", "SimStats",
+    # noise trajectories
+    "with_depolarizing", "zsum_cost_fn",
     # planning
     "ExecutionPlan", "StagePlan", "PlanPredictions",
     # one-shot + internals kept public
@@ -64,4 +69,4 @@ __all__ = [
     "decompress_complex_block", "BlockSegments", "BlockStore",
 ]
 
-__version__ = "0.3.0"
+__version__ = "0.4.0"

@@ -1,5 +1,5 @@
 """BMQSIM core: the paper's contribution (compressed staged SV simulation)."""
-from .circuit import Circuit, Gate, Parameter  # noqa: F401
+from .circuit import CHANNEL_FACTORIES, Circuit, Gate, Parameter  # noqa: F401
 from .dense_engine import (  # noqa: F401
     apply_matrix, initial_state, simulate_dense, simulate_dense_sharded,
 )
@@ -9,7 +9,7 @@ from .fusion import FusedGate, fuse_gates, gates_to_unitary  # noqa: F401
 from .groups import GroupLayout, expand_bits  # noqa: F401
 from .library import (  # noqa: F401
     CIRCUIT_BUILDERS, build_circuit, maxcut_cost_fn, maxcut_edges,
-    qaoa_template, random_circuit,
+    qaoa_template, random_circuit, with_depolarizing, zsum_cost_fn,
 )
 from .partition import Partition, Stage, partition_circuit  # noqa: F401
 from .plan import ExecutionPlan, PlanPredictions, StagePlan  # noqa: F401
@@ -19,6 +19,6 @@ from .pipeline import (  # noqa: F401
     make_backend,
 )
 from .measure import block_probabilities, expect_diagonal, sample_counts  # noqa: F401
-from .result import SimResult  # noqa: F401
+from .result import BatchResult, SimResult  # noqa: F401
 from .schedule import StageSchedule, compile_schedule, execute_schedule  # noqa: F401
 from .simulator import Simulator, circuit_fingerprint  # noqa: F401

@@ -8,6 +8,14 @@ defers its matrix (``matrix is None``) until :meth:`Gate.bind` /
 the unbound template while the numeric unitaries are produced per binding
 (the :class:`~repro.core.simulator.Simulator` session exploits this to
 re-run e.g. a QAOA ansatz at many angles without re-partitioning).
+
+Circuits may also be *stochastic*: a gate whose name is in
+:data:`CHANNEL_FACTORIES` is a sampled Pauli channel — a placeholder
+(``matrix is None``, like a parameterized gate) whose concrete unitary is
+drawn per noise trajectory by :meth:`Gate.realize` from the channel's
+outcome table.  Structure (name, qubits) is fixed, so partitioning,
+fusion, and scheduling are shared across every trajectory of a batch;
+only the matrices differ per lane (``Simulator.run(trajectories=K)``).
 """
 from __future__ import annotations
 
@@ -18,7 +26,36 @@ import numpy as np
 
 from . import gates as G
 
-__all__ = ["Parameter", "Gate", "Circuit"]
+__all__ = ["Parameter", "Gate", "Circuit", "CHANNEL_FACTORIES"]
+
+
+def _depolarizing(p: float):
+    """Uniform 1-qubit depolarizing: I with prob 1-p, X/Y/Z with p/3 each."""
+    if not 0.0 <= p <= 1.0:
+        raise ValueError(f"depolarizing probability {p} outside [0, 1]")
+    return ((1.0 - p, "i"), (p / 3.0, "x"), (p / 3.0, "y"), (p / 3.0, "z"))
+
+
+def _bitflip(p: float):
+    if not 0.0 <= p <= 1.0:
+        raise ValueError(f"bit-flip probability {p} outside [0, 1]")
+    return ((1.0 - p, "i"), (p, "x"))
+
+
+def _phaseflip(p: float):
+    if not 0.0 <= p <= 1.0:
+        raise ValueError(f"phase-flip probability {p} outside [0, 1]")
+    return ((1.0 - p, "i"), (p, "z"))
+
+
+#: stochastic Pauli channels: name -> callable(*params) returning the
+#: outcome table ``((probability, gate_name), ...)``.  A gate with one of
+#: these names is a per-trajectory placeholder resolved by Gate.realize.
+CHANNEL_FACTORIES = {
+    "depol": _depolarizing,
+    "bitflip": _bitflip,
+    "phaseflip": _phaseflip,
+}
 
 
 @dataclass(frozen=True)
@@ -60,7 +97,12 @@ class Gate:
     def __post_init__(self):
         k = len(self.qubits)
         assert len(set(self.qubits)) == k, f"duplicate qubits in {self.name}"
-        if self.is_parameterized:
+        if self.is_stochastic:
+            assert self.matrix is None, self.name
+            assert k == 1, f"channel {self.name} must act on one qubit"
+            assert not self.is_parameterized, \
+                f"channel {self.name} probabilities must be concrete"
+        elif self.is_parameterized:
             assert self.matrix is None, self.name
         else:
             assert self.matrix is not None and \
@@ -76,9 +118,42 @@ class Gate:
         return any(isinstance(p, Parameter) for p in self.params)
 
     @property
+    def is_stochastic(self) -> bool:
+        """True for a sampled Pauli channel (resolved by :meth:`realize`)."""
+        return self.name in CHANNEL_FACTORIES
+
+    @property
     def free_parameters(self) -> frozenset[str]:
         return frozenset(p.name for p in self.params
                          if isinstance(p, Parameter))
+
+    def outcomes(self) -> tuple[tuple[float, str], ...]:
+        """A channel's ``((probability, gate_name), ...)`` outcome table."""
+        if not self.is_stochastic:
+            raise ValueError(f"gate {self.name!r} is not a channel")
+        return CHANNEL_FACTORIES[self.name](*self.params)
+
+    def realize(self, rng: np.random.Generator) -> "Gate":
+        """Draw one concrete realization of a stochastic channel.
+
+        Deterministic given the rng state: the engine's trajectory lanes
+        and the dense oracle (:meth:`Circuit.realize`) consume the same
+        stream in circuit order, so equal seeds reproduce equal gates.
+        Non-stochastic gates return themselves (no draw is consumed).
+        """
+        if not self.is_stochastic:
+            return self
+        table = self.outcomes()
+        u = float(rng.random())
+        acc = 0.0
+        picked = table[-1][1]
+        for prob, name in table:
+            acc += prob
+            if u < acc:
+                picked = name
+                break
+        mat = np.asarray(G.GATE_FACTORIES[picked](), dtype=np.complex128)
+        return Gate(picked, self.qubits, mat, ())
 
     def bind(self, values: Mapping[str, float]) -> "Gate":
         """Substitute parameter values; returns a concrete gate."""
@@ -124,6 +199,25 @@ class Circuit:
     def p(self, lam, q):       return self.append("p", [q], lam)
     def u3(self, th, ph, lam, q): return self.append("u3", [q], th, ph, lam)
     # two-qubit: (target, control) order in the stored tuple
+    # stochastic Pauli channels (sampled per trajectory at bind time)
+    def append_channel(self, name: str, qubits: Sequence[int],
+                       *params) -> "Circuit":
+        if name not in CHANNEL_FACTORIES:
+            raise KeyError(f"unknown channel {name!r}; "
+                           f"have {sorted(CHANNEL_FACTORIES)}")
+        for q in qubits:
+            if not 0 <= q < self.n_qubits:
+                raise ValueError(f"qubit {q} out of range for n={self.n_qubits}")
+        gate = Gate(name, tuple(qubits), None,
+                    tuple(float(p) for p in params))
+        gate.outcomes()               # fail on bad probabilities at append
+        self.gates.append(gate)
+        return self
+
+    def depolarize(self, p, q):  return self.append_channel("depol", [q], p)
+    def bitflip(self, p, q):     return self.append_channel("bitflip", [q], p)
+    def phaseflip(self, p, q):   return self.append_channel("phaseflip", [q], p)
+
     def cx(self, c, t):        return self.append("cx", [t, c])
     def cz(self, c, t):        return self.append("cz", [t, c])
     def cp(self, lam, c, t):   return self.append("cp", [t, c], lam)
@@ -145,6 +239,25 @@ class Circuit:
     @property
     def is_parameterized(self) -> bool:
         return any(g.is_parameterized for g in self.gates)
+
+    @property
+    def is_stochastic(self) -> bool:
+        """True when the circuit contains sampled Pauli channels."""
+        return any(g.is_stochastic for g in self.gates)
+
+    def realize(self, rng) -> "Circuit":
+        """Draw one concrete noise trajectory: every stochastic channel
+        is replaced by a sampled Pauli gate, in circuit order, consuming
+        ``rng`` (a seed int or :class:`numpy.random.Generator`).  The
+        engine's trajectory lanes use the same stream/order, so the dense
+        oracle ``simulate_dense(circuit.realize(seed))`` reproduces lane
+        ``seed`` of a batch exactly.
+        """
+        if isinstance(rng, (int, np.integer)):
+            rng = np.random.default_rng(int(rng))
+        return Circuit(self.n_qubits,
+                       [g.realize(rng) if g.is_stochastic else g
+                        for g in self.gates])
 
     def bind(self, values: Mapping[str, float]) -> "Circuit":
         """Return a concrete circuit with every placeholder substituted.

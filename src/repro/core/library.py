@@ -14,7 +14,8 @@ import numpy as np
 from .circuit import Circuit, Parameter
 
 __all__ = ["build_circuit", "CIRCUIT_BUILDERS", "random_circuit",
-           "maxcut_edges", "maxcut_cost_fn", "qaoa_template"]
+           "maxcut_edges", "maxcut_cost_fn", "qaoa_template",
+           "with_depolarizing", "zsum_cost_fn"]
 
 
 def cat_state(n: int) -> Circuit:
@@ -213,14 +214,44 @@ def qaoa_template(n: int, layers: int = 1) -> Circuit:
     qc = Circuit(n)
     for q in range(n):
         qc.h(q)
-    for l in range(layers):
-        gamma = Parameter(f"gamma{l}")
-        beta = Parameter(f"beta{l}")
+    for layer in range(layers):
+        gamma = Parameter(f"gamma{layer}")
+        beta = Parameter(f"beta{layer}")
         for (a, b_) in edges:
             qc.rzz(gamma, a, b_)
         for q in range(n):
             qc.rx(beta, q)
     return qc
+
+
+def with_depolarizing(circuit: Circuit, p: float) -> Circuit:
+    """Standard stochastic noise model: a 1-qubit depolarizing channel
+    (probability ``p``) after every gate, on each of the gate's qubits.
+
+    The result is a *stochastic* circuit — run it with
+    ``Simulator.run(trajectories=K)`` / :meth:`Simulator.run_batch`,
+    which draw per-trajectory Pauli realizations at bind time and share
+    the partition/schedules across all lanes.
+    """
+    noisy = Circuit(circuit.n_qubits)
+    for g in circuit.gates:
+        noisy.gates.append(g)
+        for q in g.qubits:
+            noisy.depolarize(p, q)
+    return noisy
+
+
+def zsum_cost_fn(n: int):
+    """Vectorized diagonal ``<sum_i Z_i>`` observable (trajectory tests:
+    a product state's value degrades as ``n * (1 - 4p/3)`` per layer of
+    depolarizing noise)."""
+    def diag_fn(idx):
+        idx = np.asarray(idx, dtype=np.int64)
+        pop = np.zeros(idx.shape, dtype=np.int64)
+        for k in range(n):
+            pop += (idx >> k) & 1
+        return (n - 2 * pop).astype(np.float64)
+    return diag_fn
 
 
 CIRCUIT_BUILDERS = {

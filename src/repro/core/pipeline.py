@@ -67,6 +67,21 @@ _complex_to_planes = jax.jit(complex_to_planes)
 _planes_to_complex = jax.jit(planes_to_complex)
 
 
+def _complex_to_planes_batch(amps: jax.Array) -> jax.Array:
+    """(L, n) complex64 -> (L, 2, n) f32 lane-batched plane stacks."""
+    return jnp.stack([jnp.real(amps), jnp.imag(amps)],
+                     axis=1).astype(jnp.float32)
+
+
+def _planes_to_complex_batch(planes: jax.Array) -> jax.Array:
+    """(L, 2, n) f32 lane-batched plane stacks -> (L, n) complex64."""
+    return (planes[:, 0] + 1j * planes[:, 1]).astype(jnp.complex64)
+
+
+_complex_to_planes_b = jax.jit(_complex_to_planes_batch)
+_planes_to_complex_b = jax.jit(_planes_to_complex_batch)
+
+
 class CodecBackend:
     """Where the block codec runs, as four phase hooks.
 
@@ -146,6 +161,33 @@ class CodecBackend:
         """Worker thread: host result object -> store."""
         raise NotImplementedError
 
+    # -- lane-batched phase hooks (Simulator.run_batch) ----------------------
+    #
+    # ``key_rows`` is the (L, 2^m) per-lane store-key table of ONE group —
+    # row l holds lane l's keys (lane_offset + block id).  The generic
+    # implementations loop the single-lane hooks; backends override where
+    # one stacked transfer / one kernel dispatch can cover the batch.
+
+    def fetch_group_batch(self, key_rows: np.ndarray):
+        """Worker thread: store -> host staging for all lanes of a group."""
+        return [self.fetch_group(row) for row in key_rows]
+
+    def stage_to_device_batch(self, staged, device) -> jax.Array:
+        """Dispatch thread: host staging -> (L, 2, 2^(b+m)) f32 plane
+        stacks (async) — the batched stage compute's input."""
+        return jnp.stack([self.stage_to_device(s, device) for s in staged])
+
+    def fetch_result_batch(self, planes_dev: jax.Array, n_blocks: int):
+        """Dispatch thread: (L, 2, N) device planes -> per-lane host
+        result objects (the pipeline's blocking boundary wait)."""
+        return [self.fetch_result(planes_dev[lane], n_blocks)
+                for lane in range(planes_dev.shape[0])]
+
+    def store_group_batch(self, key_rows: np.ndarray, results) -> None:
+        """Worker thread: per-lane host results -> store."""
+        for row, res in zip(key_rows, results):
+            self.store_group(row, res)
+
 
 class HostCodecBackend(CodecBackend):
     """Baseline: the full codec runs on the host (seed engine behavior).
@@ -182,6 +224,30 @@ class HostCodecBackend(CodecBackend):
         for i, bid in enumerate(block_ids):
             self.encode_host_block(int(bid), blocks[i])
         self.add_counts(compressions=len(block_ids))
+
+    # -- lane-batched overrides: one stacked boundary crossing per group --
+    def fetch_group_batch(self, key_rows):
+        lanes, n_blocks = key_rows.shape
+        flat = np.empty((lanes, n_blocks * self.bsz), dtype=np.complex64)
+        for lane, row in enumerate(key_rows):
+            for i, bid in enumerate(row):
+                flat[lane, i * self.bsz:(i + 1) * self.bsz] = \
+                    self.decode_host_block(int(bid))
+        self.add_counts(decompressions=key_rows.size)
+        return flat
+
+    def stage_to_device_batch(self, staged, device):
+        self.h2d_bytes += staged.nbytes
+        return _complex_to_planes_b(jax.device_put(jnp.asarray(staged),
+                                                   device))
+
+    def fetch_result_batch(self, planes_dev, n_blocks):
+        out = np.asarray(_planes_to_complex_b(planes_dev))  # blocking wait
+        self.d2h_bytes += out.nbytes
+        return out                     # (L, 2^(b+m)) complex64
+
+    # store_group_batch: the base per-lane loop is already right — the
+    # host encode is per-block CPU work with nothing to batch
 
 
 class DeviceCodecBackend(CodecBackend):
@@ -250,6 +316,45 @@ class DeviceCodecBackend(CodecBackend):
                                            params=self.params))
         self.add_counts(compressions=len(block_ids))
 
+    # -- lane-batched overrides: every lane's wire shares one codec
+    # dispatch (the per-call decode/encode launch is the dominant cost on
+    # a dispatch-bound config, so K lanes must not pay it K times) -------
+    def stage_to_device_batch(self, staged, device):
+        parts = [[None] * len(row) for row in staged]
+        wire, where = [], []
+        for lane, row in enumerate(staged):
+            for i, (kind, payload) in enumerate(row):
+                if kind == "raw":
+                    self.h2d_bytes += payload.nbytes
+                    parts[lane][i] = _complex_to_planes(
+                        jax.device_put(jnp.asarray(payload), device))
+                else:
+                    wire.append(payload)
+                    where.append((lane, i))
+        if wire:
+            blocks, moved = decode_blocks_planes(
+                wire, self.bsz, self.params, device,
+                interpret=self.interpret)
+            self.h2d_bytes += moved
+            for j, (lane, i) in enumerate(where):
+                parts[lane][i] = blocks[j]
+        return jnp.stack([
+            jnp.concatenate(row, axis=1) if len(row) > 1 else row[0]
+            for row in parts])
+
+    def fetch_result_batch(self, planes_dev, n_blocks):
+        lanes = planes_dev.shape[0]
+        # lane-major block order: (L, 2, N) -> (2, L*N), so one encode
+        # dispatch covers every lane's blocks and the wire list splits
+        # back per lane below
+        flat = jnp.transpose(planes_dev, (1, 0, 2)).reshape(2, -1)
+        encoded = encode_group_planes(flat, lanes * n_blocks, self.params,
+                                      interpret=self.interpret)
+        wire, moved = fetch_group_wire(encoded)   # blocks until done
+        self.d2h_bytes += moved
+        return [wire[lane * n_blocks:(lane + 1) * n_blocks]
+                for lane in range(lanes)]
+
 
 def make_backend(name: str, store: BlockStore, params: PwRelParams,
                  bsz: int, compression: bool = True, prescan: bool = True,
@@ -311,17 +416,17 @@ class StagePipeline:
         self._dec_pool = self._com_pool = None
 
     # -- timed phase wrappers (run inside worker threads) ---------------------
-    def _load(self, block_ids):
+    def _load(self, fetch, keys):
         t0 = time.perf_counter()
-        staged = self.backend.fetch_group(block_ids)
+        staged = fetch(keys)
         dt = time.perf_counter() - t0
         with self._t_lock:
             self.t_load += dt
         return staged
 
-    def _store(self, block_ids, result):
+    def _store(self, store, keys, result):
         t0 = time.perf_counter()
-        self.backend.store_group(block_ids, result)
+        store(keys, result)
         dt = time.perf_counter() - t0
         with self._t_lock:
             self.t_store += dt
@@ -329,13 +434,30 @@ class StagePipeline:
     def _device_for(self, g: int):
         return self.devices[g % len(self.devices)]
 
-    def run_stage(self, block_ids: np.ndarray, fn, mats) -> None:
+    def run_stage(self, block_ids: np.ndarray, fn, mats,
+                  lane_offsets: np.ndarray | None = None) -> None:
         """Run one stage: ``block_ids`` is the (n_groups, 2^m) layout table,
-        ``fn`` the jitted group-update function, ``mats`` its operands."""
+        ``fn`` the jitted group-update function, ``mats`` its operands.
+
+        ``lane_offsets`` switches on the batched path: per group, the
+        (L, 2^m) key table ``lane_offsets[:, None] + block_ids[g]`` flows
+        through the backend's ``*_batch`` hooks and ``fn`` updates the
+        (L, 2, 2^(b+m)) lane stack in one dispatch.
+        """
         assert self._dec_pool is not None, "use StagePipeline as a context manager"
+        back = self.backend
         n_groups, n_blocks = block_ids.shape
+        if lane_offsets is None:
+            fetch, to_dev = back.fetch_group, back.stage_to_device
+            fetch_res, store = back.fetch_result, back.store_group
+            group_keys = [block_ids[g] for g in range(n_groups)]
+        else:
+            fetch, to_dev = back.fetch_group_batch, back.stage_to_device_batch
+            fetch_res, store = back.fetch_result_batch, back.store_group_batch
+            group_keys = [lane_offsets[:, None] + block_ids[g][None, :]
+                          for g in range(n_groups)]
         pending_load = {
-            g: self._dec_pool.submit(self._load, block_ids[g])
+            g: self._dec_pool.submit(self._load, fetch, group_keys[g])
             for g in range(min(self.depth, n_groups))
         }
         staged_dev: dict[int, jax.Array] = {}
@@ -345,25 +467,25 @@ class StagePipeline:
             if amps_dev is None:
                 staged = pending_load.pop(g).result()
                 t0 = time.perf_counter()
-                amps_dev = self.backend.stage_to_device(
-                    staged, self._device_for(g))
+                amps_dev = to_dev(staged, self._device_for(g))
                 self.t_compute += time.perf_counter() - t0
             nxt = g + self.depth
             if nxt < n_groups:
                 pending_load[nxt] = self._dec_pool.submit(
-                    self._load, block_ids[nxt])
+                    self._load, fetch, group_keys[nxt])
             t0 = time.perf_counter()
             out = fn(amps_dev, *mats)                  # async dispatch
             # overlap: dispatch the next group's decode behind the compute
             nxt = g + 1
             if nxt in pending_load and pending_load[nxt].done():
-                staged_dev[nxt] = self.backend.stage_to_device(
-                    pending_load.pop(nxt).result(), self._device_for(nxt))
+                staged_dev[nxt] = to_dev(pending_load.pop(nxt).result(),
+                                         self._device_for(nxt))
             self.t_compute += time.perf_counter() - t0
             t0 = time.perf_counter()
-            result = self.backend.fetch_result(out, n_blocks)
+            result = fetch_res(out, n_blocks)
             self.t_fetch += time.perf_counter() - t0
             pending_save.append(
-                self._com_pool.submit(self._store, block_ids[g], result))
+                self._com_pool.submit(self._store, store, group_keys[g],
+                                      result))
         for fut in pending_save:               # stage barrier (§4.1 semantics)
             fut.result()

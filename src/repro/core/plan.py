@@ -169,6 +169,12 @@ class ExecutionPlan:
     params_key: tuple
     stages: tuple[StagePlan, ...]
     predicted: PlanPredictions
+    #: batch factor K the plan was provisioned for: predictions (peak
+    #: working set, boundary traffic) assume K lanes flow through every
+    #: stage together (Simulator.run_batch / noise trajectories); does
+    #: not affect the state-layout fingerprint — each lane's blocks are
+    #: laid out exactly like a single-lane run's
+    batch: int = 1
 
     @property
     def n_stages(self) -> int:
@@ -195,7 +201,8 @@ class ExecutionPlan:
             f"{' (auto)' if self.auto_tuned else ''} "
             f"inner_size={self.inner_size} "
             f"pipeline_depth={self.pipeline_depth} b_r={self.b_r:g} "
-            f"max_fused={self.max_fused_qubits}",
+            f"max_fused={self.max_fused_qubits}"
+            + (f" batch={self.batch}" if self.batch > 1 else ""),
             f"  codec     : backend={self.codec_backend} "
             f"compression={'on' if self.compression else 'off'} "
             f"prescan={'on' if self.prescan else 'off'}",
@@ -242,6 +249,7 @@ class ExecutionPlan:
             "n_devices": self.n_devices,
             "memory_budget_bytes": self.memory_budget_bytes,
             "auto_tuned": self.auto_tuned,
+            "batch": self.batch,
             "params_key": list(list(kv) for kv in self.params_key),
             "predicted": {
                 "bytes_per_amp": self.predicted.bytes_per_amp,
@@ -295,6 +303,6 @@ class ExecutionPlan:
             max_fused_qubits=d["max_fused_qubits"],
             interpret=d["interpret"], n_devices=d["n_devices"],
             memory_budget_bytes=d["memory_budget_bytes"],
-            auto_tuned=d["auto_tuned"],
+            auto_tuned=d["auto_tuned"], batch=d.get("batch", 1),
             params_key=tuple(tuple(kv) for kv in d["params_key"]),
             stages=tuple(stages), predicted=PlanPredictions(**pd))

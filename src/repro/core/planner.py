@@ -47,7 +47,8 @@ from .schedule import compile_schedule
 
 __all__ = ["DEFAULT_INNER_SIZE", "DEFAULT_PIPELINE_DEPTH",
            "estimate_bytes_per_amp", "wire_bytes_per_block",
-           "resolve_config", "fuse_stage", "assemble_plan"]
+           "resolve_config", "fuse_stage", "fuse_stage_lanes",
+           "max_feasible_lanes", "assemble_plan"]
 
 DEFAULT_INNER_SIZE = 2
 DEFAULT_PIPELINE_DEPTH = 2
@@ -104,7 +105,7 @@ def wire_bytes_per_block(bsz: int, codec_backend: str,
 
 
 def _predict_working_set(n: int, b: int, max_m: int, depth: int,
-                         bpa: float) -> tuple[int, int]:
+                         bpa: float, lanes: int = 1) -> tuple[int, int]:
     """(store peak, pipeline staging) in bytes for one candidate.
 
     Store peak: the whole compressed state plus ``depth + 1`` groups'
@@ -113,13 +114,32 @@ def _predict_working_set(n: int, b: int, max_m: int, depth: int,
     staging: decoded group arrays held by the decode-ahead workers and
     the in-flight result — complex64-sized, the host backend's (larger)
     footprint, so the bound holds for both backends.
+
+    ``lanes`` is the batch factor K: a batched run keeps K compressed
+    state copies in the store and stages K-lane group stacks through the
+    pipeline, so everything scales linearly with it.
     """
+    lanes = max(1, lanes)
     n_blocks = 1 << (n - b)
-    state = int((1 << n) * bpa) + n_blocks * _BLOCK_OVERHEAD
+    state = lanes * (int((1 << n) * bpa) + n_blocks * _BLOCK_OVERHEAD)
     group = 1 << (b + max_m)
-    peak_ram = state + (depth + 1) * int(group * bpa)
-    pipeline = (depth + 2) * group * 8
+    peak_ram = state + (depth + 1) * int(group * bpa) * lanes
+    pipeline = (depth + 2) * group * 8 * lanes
     return peak_ram, pipeline
+
+
+def max_feasible_lanes(n: int, b: int, max_m: int, depth: int, bpa: float,
+                       budget: int, lanes: int) -> int:
+    """Largest sub-batch K' <= ``lanes`` whose predicted batched working
+    set fits ``budget`` (>= 1: a single lane always runs, relying on the
+    store's spill backstop when even that exceeds the budget).  The
+    engine chunks an infeasible ``run_batch`` into sub-batches of this
+    size."""
+    for cand in range(max(1, lanes), 1, -1):
+        peak, pipe = _predict_working_set(n, b, max_m, depth, bpa, cand)
+        if peak + pipe <= budget:
+            return cand
+    return 1
 
 
 def _default_auto(n: int) -> tuple[int, int, int]:
@@ -181,6 +201,7 @@ def resolve_config(circuit, config, n_devices: int = 1):
                        ram_budget_bytes=ram_budget), True, None
 
     bpa = estimate_bytes_per_amp(config.b_r, config.compression)
+    lanes = max(1, config.batch)          # provision for the batch factor
     inner_cands = ((config.inner_size,) if config.inner_size is not None
                    else _INNER_CANDIDATES)
     depth_cands = ((config.pipeline_depth,)
@@ -193,7 +214,8 @@ def resolve_config(circuit, config, n_devices: int = 1):
             eff_m = min(max(m, 2), n - b)     # partition's clamped threshold
             part = partition_circuit(circuit, b, m)
             for depth in depth_cands:
-                peak, pipe = _predict_working_set(n, b, eff_m, depth, bpa)
+                peak, pipe = _predict_working_set(n, b, eff_m, depth, bpa,
+                                                  lanes)
                 cand = (part.n_stages, b, m, depth, peak + pipe, part)
                 if fallback is None or peak + pipe < fallback[4]:
                     fallback = cand
@@ -205,8 +227,10 @@ def resolve_config(circuit, config, n_devices: int = 1):
         n_stages, b, m, depth, ws, part = fallback
         warnings.warn(
             f"memory budget {budget} B is below the smallest feasible "
-            f"working set ({ws} B at local_bits={b}); planning the "
-            "smallest candidate and relying on the disk spill tier",
+            f"working set ({ws} B at local_bits={b}"
+            + (f", batch={lanes}" if lanes > 1 else "") + "); planning "
+            "the smallest candidate and relying on the disk spill tier "
+            "(batched runs fall back to chunked sub-batches)",
             RuntimeWarning, stacklevel=3)
         return replace(config, local_bits=b, inner_size=m,
                        pipeline_depth=depth,
@@ -214,7 +238,8 @@ def resolve_config(circuit, config, n_devices: int = 1):
 
     min_stages = min(c[0] for c in feasible)
     best = [c for c in feasible if c[0] == min_stages]
-    if len(best) > 1 and not circuit.free_parameters:
+    if len(best) > 1 and not circuit.free_parameters \
+            and not circuit.is_stochastic:
         # transpose tie-break needs concrete matrices; cap the candidates
         # so plan time stays trivial next to a single stage's compute
         best = sorted(best, key=lambda c: -c[1])[:6]
@@ -243,6 +268,44 @@ def fuse_stage(layout: GroupLayout, gates, max_fused: int,
     return vgates, plan
 
 
+def fuse_stage_lanes(layout: GroupLayout, gates, max_fused: int, bindings,
+                     rngs):
+    """Fuse one stage for every lane of a batch -> shared structural plan.
+
+    Args:
+        bindings: per lane, the parameter dict (or None).
+        rngs: per lane, the trajectory rng realizing stochastic channels
+            (or None for a lane of a deterministic circuit); each lane's
+            rng is threaded through the stages in circuit order, so one
+            seed yields one consistent whole-circuit realization.
+
+    Returns ``(lane_vgates, plan)``: the per-lane fused unitaries and the
+    ONE structural plan they all execute under.  Fusion depends only on
+    gate supports — identical across lanes by construction — while
+    ``is_diagonal`` depends on matrix values (an rx(0) lane fuses to a
+    diagonal identity; a trajectory's sampled X does not), so a fused
+    gate is marked diagonal iff EVERY lane's realization is: a dense op
+    applies any unitary correctly, a diagonal op only diagonal ones.
+    """
+    lane_vgates, lane_plans = [], []
+    for params, rng in zip(bindings, rngs):
+        concrete = [g.realize(rng) if g.is_stochastic else g for g in gates]
+        vg, plan = fuse_stage(layout, concrete, max_fused, params)
+        lane_vgates.append(vg)
+        lane_plans.append(plan)
+    base = lane_plans[0]
+    for plan in lane_plans[1:]:
+        if len(plan) != len(base) or \
+                any(a[0] != b[0] for a, b in zip(plan, base)):
+            raise RuntimeError(
+                "batch lanes fused to different stage structures "
+                "(fusion must depend on gate supports only)")
+    merged = tuple(
+        (vq, all(plan[i][1] for plan in lane_plans))
+        for i, (vq, _) in enumerate(base))
+    return lane_vgates, merged
+
+
 def assemble_plan(circuit_fp: str, cfg, partition, stage_plans,
                   *, n_devices: int, interpret: bool, params_key: tuple,
                   auto_tuned: bool) -> ExecutionPlan:
@@ -268,7 +331,8 @@ def assemble_plan(circuit_fp: str, cfg, partition, stage_plans,
             n_t, n_tn = sched.n_transposes, sched.n_transposes_naive
         else:
             n_t = n_tn = 0
-        stage_bytes = wire * layout.n_groups * layout.blocks_per_group
+        stage_bytes = (wire * layout.n_groups * layout.blocks_per_group
+                       * max(1, cfg.batch))
         key = (plan, nv, cfg.use_kernel, cfg.gate_schedule, interpret)
         stages.append(StagePlan(
             index=idx, layout=layout,
@@ -281,7 +345,7 @@ def assemble_plan(circuit_fp: str, cfg, partition, stage_plans,
         tot_tn += n_tn * layout.n_groups
         tot_boundary += 2 * stage_bytes
     peak_ram, pipeline = _predict_working_set(
-        n, b, max_m, cfg.pipeline_depth, bpa)
+        n, b, max_m, cfg.pipeline_depth, bpa, cfg.batch)
     predicted = PlanPredictions(
         bytes_per_amp=bpa,
         state_bytes=int((1 << n) * bpa) + (1 << (n - b)) * _BLOCK_OVERHEAD,
@@ -297,4 +361,4 @@ def assemble_plan(circuit_fp: str, cfg, partition, stage_plans,
         max_fused_qubits=cfg.max_fused_qubits, interpret=interpret,
         n_devices=n_devices, memory_budget_bytes=cfg.memory_budget_bytes,
         auto_tuned=auto_tuned, params_key=params_key,
-        stages=tuple(stages), predicted=predicted)
+        stages=tuple(stages), predicted=predicted, batch=cfg.batch)

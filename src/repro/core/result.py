@@ -28,9 +28,9 @@ from typing import Sequence
 
 import numpy as np
 
-__all__ = ["SimResult", "stream_block_masses", "stream_sample",
-           "stream_expectation", "stream_marginal", "gather_amplitudes",
-           "collect_statevector"]
+__all__ = ["SimResult", "BatchResult", "stream_block_masses",
+           "stream_sample", "stream_expectation", "stream_marginal",
+           "gather_amplitudes", "collect_statevector"]
 
 #: lossy-tail tolerance: beyond this drift of the total probability mass
 #: from 1.0 the readout warns (the b_r bound should keep drift tiny)
@@ -266,3 +266,70 @@ class SimResult:
             raise RuntimeError("this SimResult has no owning session to "
                                "serialize from")
         self._owner._save_checkpoint(path)
+
+
+class _LaneView:
+    """Read-only decode view over one batch lane's key range: lane ``j``
+    of a batched run stores its blocks under keys offset by
+    ``j * 2^(n-b)``, and every streaming reader only needs
+    ``decode_host_block`` — so a thin key-shifting shim turns the shared
+    backend into lane ``j``'s."""
+
+    def __init__(self, backend, offset: int):
+        self._backend = backend
+        self._offset = offset
+
+    def decode_host_block(self, key: int) -> np.ndarray:
+        return self._backend.decode_host_block(self._offset + key)
+
+
+class BatchResult:
+    """Readout handle over a batched run's K final compressed states.
+
+    Obtained from :meth:`Simulator.run_batch` /
+    ``Simulator.run(trajectories=K)``.  ``result[j]`` (or
+    ``result.lanes[j]``) is lane j's full :class:`SimResult` view —
+    sampling, expectations, amplitudes, all streaming the shared store
+    through a key-shifted lane window.  :meth:`expectation` averages a
+    diagonal observable across lanes: for noise trajectories that is the
+    Monte-Carlo estimate of the noisy expectation value.
+
+    Like :class:`SimResult`, the handle is live — the owning session's
+    next run invalidates it (including every lane view).
+    """
+
+    def __init__(self, backend, n_qubits: int, local_bits: int,
+                 n_lanes: int, stats=None, owner=None, generation: int = 0):
+        self.n_qubits = n_qubits
+        self.local_bits = local_bits
+        self.stats = stats
+        n_blocks = 2 ** (n_qubits - local_bits)
+        self.lanes = [
+            SimResult(_LaneView(backend, lane * n_blocks), n_qubits,
+                      local_bits, stats=stats, owner=owner,
+                      generation=generation)
+            for lane in range(n_lanes)
+        ]
+
+    def __repr__(self) -> str:
+        return (f"BatchResult(n_qubits={self.n_qubits}, "
+                f"local_bits={self.local_bits}, n_lanes={len(self.lanes)})")
+
+    def __len__(self) -> int:
+        return len(self.lanes)
+
+    def __getitem__(self, lane: int) -> SimResult:
+        return self.lanes[lane]
+
+    def __iter__(self):
+        return iter(self.lanes)
+
+    def expectations(self, diag_fn) -> np.ndarray:
+        """Per-lane ``<psi_j|D|psi_j>`` for a diagonal observable."""
+        return np.asarray([lane.expectation(diag_fn) for lane in self.lanes])
+
+    def expectation(self, diag_fn) -> float:
+        """Lane-averaged diagonal expectation — the trajectory estimate
+        of the noisy observable (for a parameter sweep it is just the
+        mean over bindings)."""
+        return float(self.expectations(diag_fn).mean())

@@ -38,7 +38,8 @@ from functools import lru_cache
 import jax.numpy as jnp
 
 __all__ = ["TransposeOp", "GemmOp", "MidGemmOp", "DiagOp", "StageSchedule",
-           "compile_schedule", "execute_schedule", "gate_perm"]
+           "compile_schedule", "execute_schedule",
+           "execute_schedule_batched", "gate_perm"]
 
 
 @dataclass(frozen=True)
@@ -305,3 +306,91 @@ def execute_schedule(sched: StageSchedule, planes, mats, *,
                 di = di.reshape(d2).transpose(op.dperm).reshape(op.shape)
                 ar, ai = ar * dr - ai * di, ar * di + ai * dr
     return jnp.stack([ar.reshape(-1), ai.reshape(-1)])
+
+
+def _op_mat_batch(mat, bmap: tuple[int, ...] | None):
+    """(L, 2, K, K) stacked per-lane U planes -> (br, bi) of shape
+    (L, K, K), bit-permuted when needed."""
+    br, bi = mat[:, 0], mat[:, 1]
+    if bmap is not None:
+        idx = jnp.asarray(bmap)
+        br = br[:, idx][:, :, idx]
+        bi = bi[:, idx][:, :, idx]
+    return br, bi
+
+
+def execute_schedule_batched(sched: StageSchedule, planes, mats, *,
+                             use_kernel: bool, interpret: bool = True):
+    """Run a compiled schedule over an (L, 2, 2^nv) f32 plane stack.
+
+    The lane-batched sibling of :func:`execute_schedule`: every operand
+    and the plane stack carry one extra leading lane axis — ``mats[i]``
+    is ``(L, 2, K, K)`` dense / ``(L, 2, K)`` diagonal — and lane ``l``'s
+    unitaries apply to lane ``l``'s planes.  The whole L-lane batch
+    (parameter-sweep bindings or noise trajectories) traces into ONE
+    jitted call per stage, which is where the dispatch-bound speedup of
+    ``Simulator.run_batch`` comes from.
+    """
+    nv = sched.nv
+    lanes = planes.shape[0]
+    shape = (lanes,) + (2,) * nv
+    ar = planes[:, 0].reshape(shape)
+    ai = planes[:, 1].reshape(shape)
+    for op in sched.ops:
+        if isinstance(op, TransposeOp):
+            perm = (0,) + tuple(a + 1 for a in op.perm)
+            ar = ar.transpose(perm)
+            ai = ai.transpose(perm)
+        elif isinstance(op, GemmOp):
+            K = 1 << op.k
+            br, bi = _op_mat_batch(mats[op.idx], op.bmap)
+            br, bi = br.swapaxes(1, 2), bi.swapaxes(1, 2)     # U -> U^T
+            a2r, a2i = ar.reshape(lanes, -1, K), ai.reshape(lanes, -1, K)
+            if use_kernel:
+                from ..kernels.gate_apply import gemm_planes_batch
+                cr, ci = gemm_planes_batch(a2r, a2i, br, bi,
+                                           interpret=interpret)
+            else:
+                cr = a2r @ br - a2i @ bi                      # lane-batched
+                ci = a2r @ bi + a2i @ br
+            ar, ai = cr.reshape(shape), ci.reshape(shape)
+        elif isinstance(op, MidGemmOp):
+            K = 1 << op.k
+            br, bi = _op_mat_batch(mats[op.idx], op.bmap)
+            a3r = ar.reshape(lanes, op.outer, K, op.inner)
+            a3i = ai.reshape(lanes, op.outer, K, op.inner)
+            # the batched middle contraction stays an einsum: the lane
+            # axis already amortizes dispatch, and XLA batches it fine
+            def e(b, a):
+                return jnp.einsum("ljk,loki->loji", b, a)
+            cr = e(br, a3r) - e(bi, a3i)
+            ci = e(br, a3i) + e(bi, a3r)
+            ar, ai = cr.reshape(shape), ci.reshape(shape)
+        else:                                   # DiagOp
+            dr, di = mats[op.idx][:, 0], mats[op.idx][:, 1]   # (L, K)
+            K = 1 << op.k
+            if op.block is not None:
+                p, dmap = op.block
+                if dmap is not None:
+                    sel = jnp.asarray(dmap)
+                    dr, di = dr[:, sel], di[:, sel]
+                if p == nv - op.k:
+                    a2r = ar.reshape(lanes, -1, K)
+                    a2i = ai.reshape(lanes, -1, K)
+                    db_r, db_i = dr[:, None, :], di[:, None, :]
+                else:
+                    inner = 1 << (nv - p - op.k)
+                    a2r = ar.reshape(lanes, -1, K, inner)
+                    a2i = ai.reshape(lanes, -1, K, inner)
+                    db_r, db_i = dr[:, None, :, None], di[:, None, :, None]
+                cr = a2r * db_r - a2i * db_i
+                ci = a2r * db_i + a2i * db_r
+                ar, ai = cr.reshape(shape), ci.reshape(shape)
+            else:
+                d2 = (2,) * op.k
+                perm = (0,) + tuple(a + 1 for a in op.dperm)
+                dshape = (lanes,) + op.shape
+                dr = dr.reshape((lanes,) + d2).transpose(perm).reshape(dshape)
+                di = di.reshape((lanes,) + d2).transpose(perm).reshape(dshape)
+                ar, ai = ar * dr - ai * di, ar * di + ai * dr
+    return jnp.stack([ar.reshape(lanes, -1), ai.reshape(lanes, -1)], axis=1)

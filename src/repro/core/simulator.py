@@ -40,7 +40,7 @@ from .circuit import Circuit
 from .engine import BMQSimEngine, EngineConfig, SimStats
 from .pipeline import make_backend
 from .plan import ExecutionPlan, circuit_fingerprint
-from .result import SimResult
+from .result import BatchResult, SimResult
 
 __all__ = ["Simulator", "circuit_fingerprint"]
 
@@ -73,7 +73,8 @@ class Simulator:
         self.local_bits = self._engine.b
         self._meta: dict | None = None
         self._generation = 0
-        self._last: SimResult | None = None
+        self._last: SimResult | BatchResult | None = None
+        self._batched = False          # latest run was a run_batch
         self._start_stage = 0          # nonzero after a partial resume
         self._resume_params: dict | None = None
         self._closed = False
@@ -133,8 +134,9 @@ class Simulator:
 
     # -- execution -------------------------------------------------------------
     def run(self, params: dict | None = None, *,
+            trajectories: int | None = None, seed: int = 0,
             checkpoint_path: str | None = None,
-            checkpoint_every: int = 0) -> SimResult:
+            checkpoint_every: int = 0) -> "SimResult | BatchResult":
         """Execute the circuit; returns a readout handle over the final
         compressed state.
 
@@ -144,15 +146,32 @@ class Simulator:
                 new values reuses the partition, compiled stage functions
                 and schedules; only the fused gate operands are rebuilt
                 (and cached per binding).
+            trajectories: run K stochastic noise trajectories of the
+                circuit as ONE lane-batched execution and return a
+                :class:`BatchResult` (lane j realizes the circuit's Pauli
+                channels with rng seed ``seed + j``).  Required for
+                circuits containing channels (see
+                ``library.with_depolarizing``); a deterministic circuit
+                runs K identical lanes (a batching benchmark).
+            seed: base trajectory seed (lane j draws with ``seed + j``).
             checkpoint_path: with ``checkpoint_every=k``, snapshot the
                 store + progress every k stages so an interrupted run can
                 :meth:`resume` from the last completed checkpoint.
             checkpoint_every: checkpoint period in stages (0 = never).
 
         Returns:
-            A live :class:`SimResult`; invalidated by the next ``run()``
-            or :meth:`close` (persist with ``result.save(path)``).
+            A live :class:`SimResult` (or :class:`BatchResult` with
+            ``trajectories``); invalidated by the next ``run()`` or
+            :meth:`close` (persist with ``result.save(path)``).
         """
+        if trajectories is not None:
+            if checkpoint_path or checkpoint_every:
+                raise ValueError(
+                    "mid-run checkpointing is not supported for batched "
+                    "trajectory runs")
+            return self.run_batch(
+                [params] * trajectories,
+                seeds=[seed + j for j in range(trajectories)])
         if self._closed:
             raise RuntimeError("Simulator is closed")
         if self._engine is None:
@@ -181,6 +200,7 @@ class Simulator:
         self._start_stage = 0
         self._resume_params = None
         self._generation += 1          # old handles read overwritten blocks
+        self._batched = False
         on_stage_done = None
         if checkpoint_path and checkpoint_every > 0:
             def on_stage_done(idx: int) -> None:
@@ -195,7 +215,63 @@ class Simulator:
                                generation=self._generation)
         return self._last
 
-    def result(self) -> SimResult:
+    def run_batch(self, params_list, *, seeds=None) -> BatchResult:
+        """Execute K parameter bindings (and/or noise trajectories) as
+        ONE lane-batched run.
+
+        Every lane shares the partition, the compiled transpose-
+        minimizing schedules, and — crucially — every jitted stage
+        dispatch, boundary crossing and store barrier: per (stage,
+        group) the whole batch costs one call instead of K.  On
+        dispatch-bound configs (small blocks, many groups) this beats
+        the equivalent sequential sweep outright; see
+        ``benchmarks/bench_session.py``.
+
+        Args:
+            params_list: one params dict (or None) per lane.
+            seeds: per-lane trajectory seeds realizing stochastic Pauli
+                channels; defaults to ``range(K)`` for a stochastic
+                circuit and no draws otherwise.
+
+        Returns:
+            A live :class:`BatchResult` — per-lane :class:`SimResult`
+            views plus lane-averaged ``expectation`` — invalidated by
+            the next run.  When a memory budget is set and K lanes
+            exceed it, the engine warns and executes chunked
+            sub-batches (``stats.n_batch_chunks``); results are
+            identical.
+        """
+        if self._closed:
+            raise RuntimeError("Simulator is closed")
+        if self._engine is None:
+            raise RuntimeError(
+                "readout-only session (resumed without a circuit); pass "
+                "circuit= to Simulator.resume to re-run")
+        if self._start_stage > 0:
+            raise RuntimeError(
+                "a partial checkpoint is pending; finish it with run() "
+                "before starting a batched run")
+        params_list = list(params_list)
+        if seeds is None:
+            seeds = (list(range(len(params_list)))
+                     if self._engine._stochastic
+                     else [None] * len(params_list))
+        if len(seeds) != len(params_list):
+            raise ValueError(
+                f"{len(params_list)} lanes but {len(seeds)} seeds")
+        bindings = tuple(zip(params_list, seeds))
+        # validate BEFORE invalidating the previous (still intact) result
+        self._engine._validate_bindings(bindings)
+        self._generation += 1
+        self._batched = True
+        self._engine.run_batch(bindings)
+        self._last = BatchResult(self._backend, self.n_qubits,
+                                 self.local_bits, len(bindings),
+                                 stats=self._engine.stats, owner=self,
+                                 generation=self._generation)
+        return self._last
+
+    def result(self) -> "SimResult | BatchResult":
         """The latest run's (or resumed checkpoint's) readout handle."""
         if self._last is None:
             raise RuntimeError("no result yet: call run() first")
@@ -224,6 +300,11 @@ class Simulator:
 
     def _save_checkpoint(self, path: str, stages_done: int | None = None,
                          run_params: dict | None = None) -> None:
+        if self._batched:
+            raise RuntimeError(
+                "checkpointing a batched run is not supported: the store "
+                "holds K lane states under one manifest; read the lanes "
+                "out (BatchResult) or re-run the binding you want to keep")
         if stages_done is None and self._engine is not None:
             stages_done = self._engine.partition.n_stages
         self._backend.store.snapshot(
@@ -268,6 +349,7 @@ class Simulator:
             sim.local_bits = meta["local_bits"]
             sim._meta = meta
             sim._generation = 1
+            sim._batched = False
             sim._start_stage = 0
             sim._resume_params = None
             sim._closed = False

@@ -36,8 +36,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["gemm_planes", "gemm_planes_mid", "diag_apply",
-           "DEFAULT_ROW_TILE"]
+__all__ = ["gemm_planes", "gemm_planes_batch", "gemm_planes_mid",
+           "diag_apply", "DEFAULT_ROW_TILE"]
 
 DEFAULT_ROW_TILE = 256
 
@@ -71,6 +71,49 @@ def gemm_planes(ar: jax.Array, ai: jax.Array, br: jax.Array, bi: jax.Array,
         grid=grid,
         in_specs=[a_spec, a_spec, b_spec, b_spec],
         out_specs=[out_spec, out_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(ar, ai, br, bi)
+
+
+def _gemm_batch_kernel(ar_ref, ai_ref, br_ref, bi_ref, cr_ref, ci_ref):
+    ar = ar_ref[0]            # (TR, K) row tile of one lane
+    ai = ai_ref[0]
+    br = br_ref[0]            # (K, K) = lane's own U^T
+    bi = bi_ref[0]
+    dot = functools.partial(jnp.dot, preferred_element_type=jnp.float32)
+    cr_ref[0] = dot(ar, br) - dot(ai, bi)
+    ci_ref[0] = dot(ar, bi) + dot(ai, br)
+
+
+def gemm_planes_batch(ar: jax.Array, ai: jax.Array,
+                      br: jax.Array, bi: jax.Array,
+                      *, row_tile: int = DEFAULT_ROW_TILE,
+                      interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """(L, R, K) x (L, K, K) lane-batched complex GEMM on re/im planes.
+
+    The batched-execution sibling of :func:`gemm_planes`: lane ``l`` of A
+    contracts against lane ``l`` of B (each lane of a parameter-sweep /
+    noise-trajectory batch carries its own unitary), with the grid 2-D
+    over (lane, row tiles) so the whole batch is one kernel dispatch.
+    ``br``/``bi`` are the per-lane U^T planes, like :func:`gemm_planes`.
+    """
+    L, R, K = ar.shape
+    assert br.shape == (L, K, K) and bi.shape == (L, K, K) \
+        and ai.shape == (L, R, K)
+    tr = min(row_tile, R)
+    while R % tr:       # R, tr are powers of two in every caller; keep safe
+        tr //= 2
+    grid = (L, R // tr)
+    a_spec = pl.BlockSpec((1, tr, K), lambda lane, i: (lane, i, 0))
+    b_spec = pl.BlockSpec((1, K, K), lambda lane, i: (lane, 0, 0))
+    out_shape = [jax.ShapeDtypeStruct((L, R, K), jnp.float32)] * 2
+    fn = pl.pallas_call(
+        _gemm_batch_kernel,
+        grid=grid,
+        in_specs=[a_spec, a_spec, b_spec, b_spec],
+        out_specs=[a_spec, a_spec],
         out_shape=out_shape,
         interpret=interpret,
     )

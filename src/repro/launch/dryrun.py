@@ -28,8 +28,7 @@ import sys
 import time
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from ..configs import ALIASES, get_config
 from ..configs.shapes import (SHAPES, cell_is_applicable, input_specs,
@@ -42,7 +41,7 @@ from ..models import transformer as T
 from ..optim import make_optimizer
 from ..serving.kvcache import compress_prefill_cache
 from ..serving.step import make_decode_step, make_prefill_step
-from ..train.step import init_train_state, make_loss_fn, make_train_step
+from ..train.step import init_train_state, make_train_step
 from .mesh import make_production_mesh
 
 # TPU v5e constants (assignment §ROOFLINE ANALYSIS)

@@ -15,20 +15,9 @@ working set and boundary traffic — and exits without executing a stage.
 import argparse
 
 import jax
-import numpy as np
 
-from ..core import EngineConfig, Simulator, build_circuit
-
-
-def _zsum(n: int):
-    """Diagonal <sum_i Z_i>: n minus twice the popcount of each index."""
-    def diag_fn(idx):
-        idx = np.asarray(idx, dtype=np.int64)
-        pop = np.zeros(idx.shape, dtype=np.int64)
-        for k in range(n):
-            pop += (idx >> k) & 1
-        return (n - 2 * pop).astype(np.float64)
-    return diag_fn
+from ..core import (EngineConfig, Simulator, build_circuit,
+                    with_depolarizing, zsum_cost_fn)
 
 
 def main(argv=None):
@@ -67,6 +56,20 @@ def main(argv=None):
                     help="disable the transpose-minimizing stage schedule "
                          "and run the per-gate transpose/apply/inverse "
                          "path (for comparison)")
+    ap.add_argument("--noise", type=float, default=None, metavar="P",
+                    help="insert a depolarizing Pauli channel with "
+                         "probability P after every gate (stochastic "
+                         "circuit; needs --trajectories)")
+    ap.add_argument("--trajectories", type=int, default=None, metavar="K",
+                    help="sample K noise trajectories as ONE lane-batched "
+                         "run; --expect reports the trajectory average")
+    ap.add_argument("--batch", type=int, default=None, metavar="K",
+                    help="run K identical lanes of a deterministic "
+                         "circuit through the batched engine (one "
+                         "dispatch per stage+group covers all lanes)")
+    ap.add_argument("--noise-seed", type=int, default=0,
+                    help="base trajectory seed (lane j draws with "
+                         "seed+j)")
     ap.add_argument("--shots", type=int, default=0,
                     help="sample N bitstrings from the compressed final "
                          "state (streamed; prints the top-5 outcomes)")
@@ -80,6 +83,18 @@ def main(argv=None):
                          "(readout flags still apply)")
     args = ap.parse_args(argv)
 
+    lanes = args.trajectories or args.batch
+    if args.trajectories and args.batch:
+        ap.error("--trajectories and --batch are exclusive (both set "
+                 "the lane count)")
+    if args.noise is not None and not args.trajectories:
+        ap.error("--noise makes the circuit stochastic; pass "
+                 "--trajectories K to sample it")
+    if lanes and (args.save or args.resume):
+        ap.error("checkpointing a batched run is not supported; drop "
+                 "--save/--resume or the batch flags")
+
+    batch = None                       # BatchResult of a lane-batched run
     if args.resume:
         if args.explain:
             ap.error("--explain needs a circuit to compile; it cannot be "
@@ -93,12 +108,14 @@ def main(argv=None):
     else:
         n = args.qubits
         qc = build_circuit(args.circuit, n)
+        if args.noise is not None:
+            qc = with_depolarizing(qc, args.noise)
         cfg = EngineConfig(
             local_bits=args.block_bits, inner_size=args.inner_size,
             b_r=args.b_r, pipeline_depth=args.pipeline_depth,
             codec_backend=args.codec_backend,
             use_kernel=args.use_kernel, gate_schedule=args.gate_schedule,
-            devices=jax.devices(),
+            devices=jax.devices(), batch=lanes or 1,
             memory_budget_bytes=(int(args.memory_budget * 2 ** 20)
                                  if args.memory_budget else None),
             ram_budget_bytes=(int(args.ram_mb * 2 ** 20)
@@ -115,8 +132,18 @@ def main(argv=None):
                   f"pipeline_depth={rcfg.pipeline_depth}"
                   + (f" under {args.memory_budget:g} MiB budget"
                      if args.memory_budget else " (no budget: heuristic)"))
-        result = sim.run()
+        if lanes:
+            batch = sim.run(trajectories=lanes, seed=args.noise_seed)
+            result = batch[0]          # readout flags stream lane 0
+        else:
+            result = sim.run()
         stats = sim.stats
+        if lanes:
+            kind = "trajectories" if args.trajectories else "lanes"
+            print(f"[qsim] batched run: {lanes} {kind} in "
+                  f"{stats.n_batch_chunks} sub-batch(es)"
+                  + (f", depolarizing p={args.noise:g}"
+                     if args.noise is not None else ""))
         print(f"[qsim] {args.circuit} n={n}: {stats.n_gates} gates, "
               f"{stats.n_stages} stages, {stats.n_fused_unitaries} fused")
         print(f"[qsim] peak {stats.peak_total_bytes/2**20:.1f} MiB "
@@ -140,8 +167,14 @@ def main(argv=None):
         print(f"[qsim] top-5 of {args.shots} shots: "
               + ", ".join(f"|{k:0{n}b}>x{v}" for k, v in top))
     if args.expect == "zsum":
-        val = result.expectation(_zsum(n))
-        print(f"[qsim] <sum Z_i> = {val:.6f}")
+        if batch is None:
+            val = result.expectation(zsum_cost_fn(n))
+            print(f"[qsim] <sum Z_i> = {val:.6f}")
+        else:
+            vals = batch.expectations(zsum_cost_fn(n))
+            print(f"[qsim] <sum Z_i> = {vals.mean():.6f} "
+                  f"(avg over {len(vals)} lanes, "
+                  f"std {vals.std():.6f})")
     if args.save:
         result.save(args.save)
         print(f"[qsim] checkpoint -> {args.save}")

@@ -9,7 +9,7 @@ remainder when ``n_layers % len(pattern) != 0``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 __all__ = ["MoEConfig", "EncoderConfig", "ModelConfig", "LayerKind"]
 

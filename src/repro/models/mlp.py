@@ -4,7 +4,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .config import ModelConfig
 from .layers import Param, dense_init
 
 __all__ = ["init_mlp_params", "mlp"]

@@ -20,8 +20,6 @@ them through the same unit loop.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

@@ -170,7 +170,6 @@ def _slstm_step(prm, carry, wx_t):
     """carry: (h, c, n, m) each (B, d) f32; wx_t: (B, 4d) f32."""
     h, c, n, m = carry
     raw = wx_t + h @ prm["r_gates"].astype(jnp.float32) + prm["b_gates"]
-    d = h.shape[-1]
     i_raw, f_raw, z_raw, o_raw = jnp.split(raw, 4, axis=-1)
     logf = jax.nn.log_sigmoid(f_raw)
     m_new = jnp.maximum(logf + m, i_raw)

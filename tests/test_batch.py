@@ -1,0 +1,277 @@
+"""Batched execution engine: run_batch lane equivalence, noise
+trajectories vs the dense oracle and the analytic noisy expectation,
+budget-driven sub-batch chunking, and the benchmark regression gate."""
+import json
+
+import numpy as np
+import pytest
+
+from benchmarks import compare as bench_compare
+from repro.core import (Circuit, EngineConfig, Simulator, build_circuit,
+                        fidelity, qaoa_template, random_circuit,
+                        simulate_dense, with_depolarizing, zsum_cost_fn)
+
+#: cross-path fidelity floor: the batched kernels and the single-lane
+#: kernels round differently and both sides quantize at b_r=1e-3; deep
+#: circuits land around 0.9998 — don't assert tighter
+FIDELITY_FLOOR = 0.999
+
+
+def _fid(a, b):
+    return fidelity(np.asarray(a, np.complex128), np.asarray(b, np.complex128))
+
+
+# -- batch-vs-sequential equivalence -----------------------------------------
+
+def test_run_batch_deterministic_lanes_match_single_run():
+    qc = build_circuit("qft", 8)
+    cfg = EngineConfig(local_bits=4, inner_size=2)
+    with Simulator(qc, cfg) as sim:
+        batch = sim.run_batch([None] * 3)
+        assert len(batch) == 3
+        lanes = [lane.statevector() for lane in batch]
+    with Simulator(qc, cfg) as sim:
+        ref = sim.run().statevector()
+    for sv in lanes:
+        assert _fid(ref, sv) > FIDELITY_FLOOR
+
+
+def test_run_batch_param_sweep_matches_sequential():
+    template = qaoa_template(8, layers=1)
+    cfg = EngineConfig(local_bits=4, inner_size=2)
+    points = [{"gamma0": 0.3 + 0.2 * i, "beta0": 0.1 + 0.1 * i}
+              for i in range(4)]
+    with Simulator(template, cfg) as sim:
+        batch = sim.run_batch(points)
+        lanes = [lane.statevector() for lane in batch]
+    with Simulator(template, cfg) as sim:
+        for p, sv in zip(points, lanes):
+            ref = sim.run(params=p).statevector()
+            assert _fid(ref, sv) > FIDELITY_FLOOR
+
+
+def test_run_batch_matches_sequential_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    template = qaoa_template(6, layers=1)
+    cfg = EngineConfig(local_bits=3, inner_size=2)
+
+    @hyp.settings(max_examples=5, deadline=None)
+    @hyp.given(angles=st.lists(
+        st.tuples(st.floats(0.05, 3.0), st.floats(0.05, 3.0)),
+        min_size=1, max_size=4))
+    def inner(angles):
+        points = [{"gamma0": g, "beta0": b} for g, b in angles]
+        with Simulator(template, cfg) as sim:
+            batch = sim.run_batch(points)
+            lanes = [lane.statevector() for lane in batch]
+        with Simulator(template, cfg) as sim:
+            for p, sv in zip(points, lanes):
+                ref = sim.run(params=p).statevector()
+                assert _fid(ref, sv) > FIDELITY_FLOOR
+
+    inner()
+
+
+@pytest.mark.parametrize("seed", [1, 2])
+def test_run_batch_random_circuits_match_dense(seed):
+    """Random circuits hit every schedule op type (GemmOp/MidGemmOp,
+    block + scattered DiagOp, bmap'd operands) — the batched executor
+    must agree with the dense oracle on all of them."""
+    qc = random_circuit(6, 24, seed=seed)
+    ref = simulate_dense(qc)
+    with Simulator(qc, EngineConfig(local_bits=3, inner_size=2)) as sim:
+        batch = sim.run_batch([None] * 2)
+        for lane in batch:
+            assert _fid(ref, lane.statevector()) > FIDELITY_FLOOR
+
+
+def test_batch_stagefns_compile_once_across_repeats():
+    qc = build_circuit("qft", 8)
+    with Simulator(qc, EngineConfig(local_bits=4)) as sim:
+        sim.run_batch([None] * 2)
+        compiles = sim.stats.n_stagefn_compiles
+        sim.run_batch([None] * 2)
+        assert sim.stats.n_stagefn_compiles == compiles
+        assert sim.stats.n_lanes == 2
+
+
+def test_batch_result_goes_stale_on_next_run():
+    qc = build_circuit("qft", 8)
+    with Simulator(qc, EngineConfig(local_bits=4)) as sim:
+        batch = sim.run_batch([None] * 2)
+        lane = batch[1]
+        lane.sample(16)                         # live
+        sim.run()
+        with pytest.raises(RuntimeError, match="stale"):
+            lane.sample(16)
+        with pytest.raises(RuntimeError, match="not supported"):
+            # a batched run has no single-state checkpoint manifest
+            sim.run_batch([None] * 2)[0].save("nope.bmq")
+
+
+# -- noise trajectories ------------------------------------------------------
+
+def test_trajectory_lane_matches_realized_dense_oracle():
+    noisy = with_depolarizing(build_circuit("ghz_state", 6), 0.08)
+    assert noisy.is_stochastic
+    with Simulator(noisy, EngineConfig(local_bits=3)) as sim:
+        batch = sim.run(trajectories=3, seed=11)
+        for j in range(3):
+            oracle = simulate_dense(noisy.realize(11 + j))
+            assert _fid(oracle, batch[j].statevector()) > FIDELITY_FLOOR
+
+
+def test_trajectory_average_converges_to_analytic_noisy_expectation():
+    """|0..0> through one depolarizing layer: <sum Z> = n * (1 - 4p/3)
+    analytically; the K-trajectory Monte-Carlo average must land near it
+    (loose tolerance — K=48 trajectories of a 4-qubit state)."""
+    n, p, K = 4, 0.2, 48
+    qc = Circuit(n)
+    for q in range(n):
+        qc.depolarize(p, q)
+    with Simulator(qc, EngineConfig(local_bits=2)) as sim:
+        batch = sim.run(trajectories=K, seed=3)
+        est = batch.expectation(zsum_cost_fn(n))
+    analytic = n * (1.0 - 4.0 * p / 3.0)
+    assert abs(est - analytic) < 0.6            # ~3 sigma at K=48
+
+
+def test_trajectories_are_seeded_and_reproducible():
+    noisy = with_depolarizing(build_circuit("cat_state", 5), 0.1)
+    cost = zsum_cost_fn(5)
+    with Simulator(noisy, EngineConfig(local_bits=3)) as sim:
+        a = sim.run(trajectories=4, seed=9).expectations(cost)
+        b = sim.run(trajectories=4, seed=9).expectations(cost)
+        np.testing.assert_allclose(a, b)
+
+
+def test_stochastic_circuit_rejects_plain_run():
+    noisy = with_depolarizing(build_circuit("cat_state", 5), 0.1)
+    with Simulator(noisy, EngineConfig(local_bits=3)) as sim:
+        with pytest.raises(ValueError, match="trajectories"):
+            sim.run()
+
+
+def test_channel_builder_validates():
+    qc = Circuit(2)
+    with pytest.raises(ValueError):
+        qc.depolarize(1.5, 0)
+    with pytest.raises(KeyError):
+        qc.append_channel("amp_damp", [0], 0.1)
+    qc.depolarize(0.25, 1)
+    assert qc.is_stochastic and qc.gates[0].matrix is None
+    concrete = qc.realize(0)
+    assert not concrete.is_stochastic
+    assert concrete.gates[0].matrix is not None
+
+
+# -- planner: budget awareness of the batch factor ---------------------------
+
+def test_tight_budget_forces_chunked_subbatches_and_holds_peak():
+    from repro.core.planner import _predict_working_set, estimate_bytes_per_amp
+    qc = build_circuit("qft", 10)
+    K = 4
+    # a budget that admits the predicted 2-lane working set but not 4
+    # lanes: run_batch must warn and execute chunked sub-batches
+    bpa = estimate_bytes_per_amp(1e-3, True)
+    peak2, pipe2 = _predict_working_set(10, 5, 2, 2, bpa, lanes=2)
+    budget = peak2 + pipe2 + 1
+    cfg = EngineConfig(local_bits=5, inner_size=2,
+                       memory_budget_bytes=budget, batch=K)
+    with Simulator(qc, cfg) as sim:
+        with pytest.warns(RuntimeWarning, match="sub-batches"):
+            batch = sim.run_batch([None] * K)
+        assert sim.stats.n_batch_chunks > 1
+        assert sim.stats.n_lanes == K
+        # the store budget backstop holds even while K final states live
+        assert sim.stats.peak_ram_bytes <= budget
+        # chunking must not change the answer
+        ref = simulate_dense(qc)
+        for lane in batch:
+            assert _fid(ref, lane.statevector()) > FIDELITY_FLOOR
+
+
+def test_planner_scales_working_set_with_batch():
+    from repro.core.planner import _predict_working_set, max_feasible_lanes
+    peak1, pipe1 = _predict_working_set(12, 6, 2, 2, 4.0, lanes=1)
+    peak4, pipe4 = _predict_working_set(12, 6, 2, 2, 4.0, lanes=4)
+    assert peak4 > 3 * peak1 and pipe4 == 4 * pipe1
+    budget = (peak1 + pipe1) * 2
+    got = max_feasible_lanes(12, 6, 2, 2, 4.0, budget, 8)
+    assert 1 <= got < 8
+    assert max_feasible_lanes(12, 6, 2, 2, 4.0, 10 * (peak4 + pipe4), 4) == 4
+
+
+def test_plan_records_batch_factor_and_round_trips():
+    from repro.core.plan import ExecutionPlan
+    qc = build_circuit("qft", 10)
+    cfg = EngineConfig(local_bits=5, batch=4)
+    with Simulator(qc, cfg) as sim:
+        plan = sim.compile()
+        assert plan.batch == 4
+        again = ExecutionPlan.from_json(plan.to_json())
+        assert again.batch == 4 and again.fingerprint == plan.fingerprint
+
+
+# -- the CI benchmark regression gate ----------------------------------------
+
+@pytest.fixture(autouse=True)
+def _no_step_summary(monkeypatch):
+    """compare.main appends its table to $GITHUB_STEP_SUMMARY when set —
+    the synthetic fixtures here must not pollute a real CI job summary
+    with fake regression tables."""
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+
+
+def _bench_json(tmp_path, name, values):
+    report = {"benches": {"demo": {"elapsed_s": 1.0, "metrics": {
+        "demo": values}}}, "unix_time": 0.0}
+    path = tmp_path / name
+    path.write_text(json.dumps(report))
+    return str(path)
+
+
+def test_compare_passes_on_noise_and_fails_on_5x(tmp_path):
+    base = _bench_json(tmp_path, "base.json",
+                       {"a_s": 1.0, "b_s": 2.0, "c_s": 4.0, "n_gates": 9})
+    ok = _bench_json(tmp_path, "ok.json",
+                     {"a_s": 1.8, "b_s": 2.5, "c_s": 3.1, "n_gates": 9})
+    slow = _bench_json(tmp_path, "slow.json",
+                       {"a_s": 5.0, "b_s": 2.0, "c_s": 4.0, "n_gates": 9})
+    assert bench_compare.main([base, ok]) == 0
+    assert bench_compare.main([base, slow]) != 0
+    # a uniformly 4x slower runner is machine noise, not a regression
+    uniform = _bench_json(tmp_path, "uniform.json",
+                          {"a_s": 4.0, "b_s": 8.0, "c_s": 16.0})
+    assert bench_compare.main([base, uniform]) == 0
+    # ... unless the gate is asked for absolute ratios
+    assert bench_compare.main([base, uniform, "--absolute"]) != 0
+    # the normalization blind spot is bounded: a suite-wide 20x slowdown
+    # cannot hide behind its own median
+    crater = _bench_json(tmp_path, "crater.json",
+                         {"a_s": 20.0, "b_s": 40.0, "c_s": 80.0})
+    assert bench_compare.main([base, crater]) != 0
+
+
+def test_compare_skips_micro_rows_and_disjoint_keys(tmp_path):
+    base = _bench_json(tmp_path, "base.json",
+                       {"tiny_s": 0.001, "real_s": 1.0, "gone_s": 1.0})
+    new = _bench_json(tmp_path, "new.json",
+                      {"tiny_s": 0.9, "real_s": 1.1, "fresh_s": 1.0})
+    # tiny_s blew up 900x but sits under the noise floor; gone_s/fresh_s
+    # have no counterpart — neither may trip the gate
+    assert bench_compare.main([base, new]) == 0
+
+
+def test_compare_gate_on_committed_baselines():
+    """The real pair the CI job diffs: the committed perf-trajectory
+    baselines must pass their own gate."""
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parent.parent
+    base = root / "BENCH_4.json"
+    cur = root / "BENCH_5.json"
+    if not (base.exists() and cur.exists()):
+        pytest.skip("committed BENCH baselines not present")
+    assert bench_compare.main([str(base), str(cur)]) == 0

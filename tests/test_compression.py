@@ -9,8 +9,7 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 from hypothesis.extra import numpy as hnp
 
-from repro.compression import (BlockStore, CompressedBlock, PwRelParams,
-                               compress_complex_block,
+from repro.compression import (PwRelParams, compress_complex_block,
                                decompress_complex_block)
 from repro.compression.codec import (prescan_decode_bitmap,
                                      prescan_encode_bitmap)

@@ -1,13 +1,10 @@
 """Multi-device behaviour (subprocess with 8 host devices, since the
 parent process is pinned to 1 device): BMQSIM group-parallel equivalence,
 dense sharded baseline, sharding rules on a real mesh."""
-import json
 import os
 import subprocess
 import sys
 import textwrap
-
-import pytest
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 

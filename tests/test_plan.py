@@ -81,7 +81,7 @@ def test_unsatisfiable_budget_warns_and_spills():
 def test_planned_execution_state_identical_property():
     """Planned execution is state-identical to running the explicit
     config the planner chose — across random circuits and budgets."""
-    hyp = pytest.importorskip("hypothesis")
+    pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
 
     @settings(max_examples=5, deadline=None)

@@ -1,13 +1,10 @@
 """Sharding-rule unit tests (pure spec logic — no big meshes needed)."""
 import jax
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.configs.shapes import input_specs
-from repro.distributed.sharding import (batch_pspecs, cache_pspecs, dp_axes,
-                                        param_pspecs)
+from repro.distributed.sharding import batch_pspecs, dp_axes, param_pspecs
 
 
 class FakeMesh:
