@@ -64,14 +64,97 @@ def _stage_fn_time(name: str, n: int, local_bits: int, reps: int = 8):
     return tot
 
 
+def _depth_sweep(name: str, n: int, local_bits: int, prefix: str = "",
+                 rounds: int = 8) -> dict[int, float]:
+    """Warm per-depth wall clock of the wave-coalesced scheduler.
+
+    Two measurement rules keep the ~10% overlap effect above the
+    container's timing noise:
+
+    * each depth gets one WARMUP run before timing — a new wave width
+      means new stage-fn trace shapes, and charging depth>1 (but not
+      depth 1, whose traces the warmup also compiled) for one-off jit
+      compilation would report the old always-lose artifact instead of
+      the steady-state schedule the planner's model predicts;
+    * the depths are timed INTERLEAVED round-robin over live sessions
+      (min over rounds), not in per-depth blocks — single-core container
+      throughput drifts by tens of percent over minutes, and block
+      timing folds that drift into the depth ratio.  The min needs a
+      deep sample: identical runs swing ~1.6x on a noisy container, so
+      fewer than ~8 rounds leaves the ratio itself noise-dominated.
+
+    ``depth_2_speedup`` is the gated headline: sequential min / depth-2
+    min from the same interleaved rounds.
+    """
+    best = _measure_depths(name, n, local_bits, rounds)
+    for d in sorted(best):
+        emit("pipeline", f"{prefix}depth_{d}_s", best[d])
+        emit("pipeline", f"{prefix}depth_{d}_speedup", best[1] / best[d])
+    return best
+
+
+def _measure_depths(name: str, n: int, local_bits: int,
+                    rounds: int = 8) -> dict[int, float]:
+    qc = build_circuit(name, n)
+    depths = (1, 2, 4)
+    sims = {}
+    try:
+        for d in depths:
+            sims[d] = Simulator(qc, EngineConfig(
+                local_bits=local_bits, pipeline_depth=d)).__enter__()
+            sims[d].run()              # warmup: compile stage/wave fns
+        best = {d: float("inf") for d in depths}
+        for _ in range(rounds):
+            for d in depths:
+                t0 = time.perf_counter()
+                sims[d].run()
+                best[d] = min(best[d], time.perf_counter() - t0)
+    finally:
+        for sim in sims.values():
+            sim.__exit__(None, None, None)
+    return best
+
+
+def _depth_sweep_isolated(name: str, n: int, local_bits: int,
+                          prefix: str = "") -> None:
+    """Run the depth sweep in a FRESH interpreter and re-emit its rows.
+
+    By the time the suite reaches this bench the process has hours of
+    allocator churn and jit-cache pressure behind it, which reproducibly
+    skews the small (~10%) depth ratios that the ``depth_2_speedup``
+    gate protects; a clean process measures the schedule, not the
+    process history.  Falls back to in-process when spawning fails.
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+
+    code = ("import json\n"
+            "from benchmarks.bench_pipeline import _measure_depths\n"
+            f"best = _measure_depths({name!r}, {n}, {local_bits})\n"
+            "print('SWEEP ' + json.dumps(best))\n")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    try:
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, check=True,
+                             timeout=1800).stdout
+        payload = [ln for ln in out.splitlines() if ln.startswith("SWEEP ")]
+        best = {int(k): v for k, v in json.loads(payload[-1][6:]).items()}
+    except (subprocess.SubprocessError, OSError, IndexError):
+        _depth_sweep(name, n, local_bits, prefix)
+        return
+    for d in sorted(best):
+        emit("pipeline", f"{prefix}depth_{d}_s", best[d])
+        emit("pipeline", f"{prefix}depth_{d}_speedup", best[1] / best[d])
+
+
 def main():
-    base = None
-    for depth in (1, 2, 4, 8):
-        _, _, _, t = run_engine("qft", 14, local_bits=7,
-                                pipeline_depth=depth)
-        base = base or t
-        emit("pipeline", f"depth_{depth}_s", t)
-        emit("pipeline", f"depth_{depth}_speedup", base / t)
+    # Fig. 12 depth sweep at the paper layout and at a cache-exceeding
+    # qft-18 layout; the *_speedup rows feed the compare.py gate
+    _depth_sweep_isolated("qft", 14, 7)
+    _depth_sweep_isolated("qft", 18, 11, prefix="qft18_")
 
     # codec backend: boundary bytes per stage, host vs device
     stats_by_backend = {}

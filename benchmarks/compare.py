@@ -15,11 +15,23 @@ Ratios are *median-normalized* by default: every row's new/old ratio is
 divided by the suite-wide median ratio before gating.  A uniformly slower
 runner (baselines are recorded on whatever container a past PR ran on)
 shifts ALL rows together and must not fail the gate; a genuine regression
-moves one row relative to the rest and still trips it.  ``--absolute``
-disables the normalization.  The blind spot — a change that slows EVERY
+moves one row relative to the rest and still trips it.  A row that did
+not slow down in *raw* seconds never fails regardless of its normalized
+ratio — a baseline whose own run drifted non-uniformly (a 40-minute
+suite on a throttling container) otherwise flags rows that actually got
+faster.  ``--absolute`` disables the normalization.  The blind spot — a change that slows EVERY
 row together (say a disabled fast path) normalizes itself away — is
 bounded by ``--max-median`` (default 10x): a suite median beyond that is
 no longer plausible machine variance and fails outright.
+
+Besides the timing rows, every shared ``*_speedup`` row (the pipeline
+depth sweep's overlap ratios, etc.) is gated too — in the OTHER
+direction: speedups are unitless ratios taken within one run, so machine
+speed cancels and no median normalization applies; a row fails when the
+current speedup falls below ``baseline / --speedup-threshold`` (default
+1.5x).  This is what keeps ``pipeline/depth_2_speedup`` from silently
+regressing back to the pre-wave-coalescing era where depth 2 *lost* to
+sequential.
 
 When ``$GITHUB_STEP_SUMMARY`` is set (GitHub Actions), the comparison
 table is appended there as markdown so the ``bench-trajectory`` job shows
@@ -37,19 +49,50 @@ import sys
 DEFAULT_THRESHOLD = 3.0
 DEFAULT_MIN_BASELINE = 0.5
 DEFAULT_MAX_MEDIAN = 10.0
+DEFAULT_SPEEDUP_THRESHOLD = 1.5
 
 
-def load_timing_rows(path: str) -> dict[str, float]:
-    """``bench/section/key -> seconds`` for every ``*_s`` metric row."""
+def _load_rows(path: str, suffix: str) -> dict[str, float]:
     with open(path) as fh:
         report = json.load(fh)
     rows: dict[str, float] = {}
     for bench, entry in report.get("benches", {}).items():
         for section, metrics in entry.get("metrics", {}).items():
             for key, value in metrics.items():
-                if key.endswith("_s") and isinstance(value, (int, float)):
+                if key.endswith(suffix) and isinstance(value, (int, float)):
                     rows[f"{bench}/{section}/{key}"] = float(value)
     return rows
+
+
+def load_timing_rows(path: str) -> dict[str, float]:
+    """``bench/section/key -> seconds`` for every ``*_s`` metric row."""
+    return _load_rows(path, "_s")
+
+
+def load_speedup_rows(path: str) -> dict[str, float]:
+    """``bench/section/key -> ratio`` for every ``*_speedup`` metric row."""
+    return _load_rows(path, "_speedup")
+
+
+def compare_speedup_rows(
+    baseline: dict[str, float],
+    current: dict[str, float],
+    threshold: float,
+) -> list[tuple[str, float, float, float, bool]]:
+    """Shared ``*_speedup`` rows -> ``[(key, old, new, old/new, lost)]``.
+
+    Speedups are within-run ratios, so no machine-speed normalization:
+    a row regresses when the current speedup dropped to less than
+    ``1/threshold`` of the baseline's.
+    """
+    out = []
+    for key in sorted(baseline):
+        if key not in current:
+            continue
+        old, new = baseline[key], current[key]
+        drop = old / new if new > 0 else float("inf")
+        out.append((key, old, new, drop, drop > threshold))
+    return out
 
 
 def compare_rows(
@@ -82,7 +125,11 @@ def compare_rows(
     out = []
     for key, old, new, ratio in shared:
         norm = ratio / scale
-        out.append((key, old, new, norm, norm > threshold))
+        # a row that is absolutely no slower never regresses: baselines
+        # recorded under NON-uniform drift (container speed moving over
+        # one long run) skew the median enough to push flat-or-faster
+        # rows past the normalized threshold
+        out.append((key, old, new, norm, norm > threshold and new > old))
     return out, median
 
 
@@ -103,6 +150,25 @@ def render_markdown(
         lines.append(f"| `{key}` | {old:.3f} | {new:.3f} | {ratio:.2f}x | {flag} |")
     if not rows:
         lines.append("| _no shared timing rows_ | | | | |")
+    return "\n".join(lines) + "\n"
+
+
+def render_speedup_markdown(
+    rows: list[tuple[str, float, float, float, bool]],
+    threshold: float,
+) -> str:
+    if not rows:
+        return ""
+    lines = [
+        f"### Speedup-row gate (fail below baseline/{threshold:g})",
+        "",
+        "| row | baseline | current | drop | |",
+        "|---|---:|---:|---:|---|",
+    ]
+    for key, old, new, drop, lost in rows:
+        flag = ":x:" if lost else ""
+        lines.append(
+            f"| `{key}` | {old:.2f}x | {new:.2f}x | {drop:.2f}x | {flag} |")
     return "\n".join(lines) + "\n"
 
 
@@ -131,6 +197,14 @@ def main(argv=None) -> int:
         "ones (fails on a uniformly slower runner; off by default)",
     )
     ap.add_argument(
+        "--speedup-threshold",
+        type=float,
+        default=DEFAULT_SPEEDUP_THRESHOLD,
+        help="fail when a *_speedup row drops below baseline divided by "
+        "this (within-run ratios: no median normalization; default "
+        "%(default)sx)",
+    )
+    ap.add_argument(
         "--max-median",
         type=float,
         default=DEFAULT_MAX_MEDIAN,
@@ -150,8 +224,16 @@ def main(argv=None) -> int:
         args.min_baseline,
         normalize=not args.absolute,
     )
+    sp_rows = compare_speedup_rows(
+        load_speedup_rows(args.baseline),
+        load_speedup_rows(args.current),
+        args.speedup_threshold,
+    )
     table = render_markdown(rows, args.threshold, median)
+    sp_table = render_speedup_markdown(sp_rows, args.speedup_threshold)
     print(table)
+    if sp_table:
+        print(sp_table)
 
     only_base = sorted(set(baseline) - set(current))
     only_new = sorted(set(current) - set(baseline))
@@ -166,6 +248,8 @@ def main(argv=None) -> int:
     if summary_path:
         with open(summary_path, "a") as fh:
             fh.write(table + "\n")
+            if sp_table:
+                fh.write(sp_table + "\n")
 
     if not args.absolute and rows and median > args.max_median:
         print(
@@ -177,15 +261,23 @@ def main(argv=None) -> int:
         return 1
 
     regressions = [r for r in rows if r[4]]
-    if regressions:
+    sp_regressions = [r for r in sp_rows if r[4]]
+    if regressions or sp_regressions:
         for key, old, new, ratio, _ in regressions:
             print(
                 f"REGRESSION {key}: {old:.3f}s -> {new:.3f}s "
                 f"({ratio:.2f}x > {args.threshold:g}x)",
                 file=sys.stderr,
             )
+        for key, old, new, drop, _ in sp_regressions:
+            print(
+                f"REGRESSION {key}: speedup {old:.2f}x -> {new:.2f}x "
+                f"(dropped {drop:.2f}x > {args.speedup_threshold:g}x)",
+                file=sys.stderr,
+            )
         return 1
-    print(f"# OK: {len(rows)} shared timing rows within {args.threshold:g}x")
+    print(f"# OK: {len(rows)} shared timing rows within {args.threshold:g}x, "
+          f"{len(sp_rows)} speedup rows held")
     return 0
 
 

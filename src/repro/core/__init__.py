@@ -13,7 +13,8 @@ from .library import (  # noqa: F401
 )
 from .partition import Partition, Stage, partition_circuit  # noqa: F401
 from .plan import ExecutionPlan, PlanPredictions, StagePlan  # noqa: F401
-from .planner import estimate_bytes_per_amp, resolve_config  # noqa: F401
+from .planner import (PipelineCalibration, estimate_bytes_per_amp,  # noqa: F401
+                      predict_depth_speedup, resolve_config)
 from .pipeline import (  # noqa: F401
     CodecBackend, DeviceCodecBackend, HostCodecBackend, StagePipeline,
     make_backend,

@@ -195,6 +195,9 @@ class SimStats:
     t_compress: float = 0.0
     t_partition: float = 0.0
     t_total: float = 0.0
+    #: group x stage phase executions behind the t_* pipeline timings —
+    #: the denominator for the planner's per-group calibration
+    n_group_phases: int = 0
 
     @property
     def standard_bytes(self) -> int:
@@ -213,6 +216,19 @@ class SimStats:
     def boundary_bytes(self) -> int:
         """Total host↔device traffic (both directions)."""
         return self.h2d_bytes + self.d2h_bytes
+
+    def pipeline_calibration(self):
+        """Measured per-group phase costs of this engine's runs, in the
+        form the planner's depth model consumes
+        (:class:`~repro.core.planner.PipelineCalibration`) — feed it back
+        through ``resolve_config(..., calibration=...)`` so the next
+        plan's ``pipeline_depth`` choice rests on measurements instead of
+        the default profile."""
+        from .planner import PipelineCalibration
+        g = max(1, self.n_group_phases)
+        return PipelineCalibration(
+            t_load=self.t_decompress / g, t_compute=self.t_compute / g,
+            t_fetch=self.t_fetch / g, t_store=self.t_compress / g)
 
 
 # --------------------------------------------------------------------------
@@ -299,15 +315,43 @@ def _stage_mats(vgates: list[FusedGate],
 @lru_cache(maxsize=256)
 def _stage_fn_batch(plan: tuple[tuple[tuple[int, ...], bool], ...], nv: int,
                     use_kernel: bool, interpret: bool):
-    """Jitted lane-batched (L, 2, 2^nv) -> (L, 2, 2^nv) group update:
+    """Jitted lane-batched (R, 2, 2^nv) -> (R, 2, 2^nv) group update:
     one dispatch covers every lane of a parameter-sweep / trajectory
     batch (lane l's planes contract against lane l's operands).  Cached
     on stage structure like :func:`_stage_fn`; jit re-specializes per
-    lane count, so one cache entry serves every batch size."""
+    row count, so one cache entry serves every batch size.
+
+    Wave-aware: when the pipeline coalesces ``d`` consecutive groups of
+    an L-lane batch into one (d·L)-row wave, the (L, ...) operands are
+    tiled in-trace to match (groups-major row order — the tile repeats
+    the lane block per group)."""
     sched = compile_schedule(plan, nv)
 
     def fn(planes, *mats):
+        if mats and planes.shape[0] != mats[0].shape[0]:
+            d = planes.shape[0] // mats[0].shape[0]
+            mats = [jnp.tile(m, (d,) + (1,) * (m.ndim - 1)) for m in mats]
         return execute_schedule_batched(sched, planes, mats,
+                                        use_kernel=use_kernel,
+                                        interpret=interpret)
+    return jax.jit(fn, donate_argnums=0)
+
+
+@lru_cache(maxsize=256)
+def _stage_fn_wave(plan: tuple[tuple[tuple[int, ...], bool], ...], nv: int,
+                   use_kernel: bool, interpret: bool):
+    """Jitted wave-coalesced (W, 2, 2^nv) -> (W, 2, 2^nv) group update
+    for a SINGLE-lane run: every row is a different SV group of the same
+    stage, so the one set of stage operands broadcasts across rows
+    in-trace (no host-side tiling, no extra transfers).  This is what
+    lets ``pipeline_depth`` amortize the per-group dispatch overhead —
+    one dispatch covers a whole wave (see core/pipeline.py)."""
+    sched = compile_schedule(plan, nv)
+
+    def fn(planes, *mats):
+        w = planes.shape[0]
+        bmats = [jnp.broadcast_to(m[None], (w,) + m.shape) for m in mats]
+        return execute_schedule_batched(sched, planes, bmats,
                                         use_kernel=use_kernel,
                                         interpret=interpret)
     return jax.jit(fn, donate_argnums=0)
@@ -339,6 +383,7 @@ class _BoundStage(NamedTuple):
     key: tuple                        # stage-fn cache key
     fn: object                        # jitted planes -> planes update
     sched: StageSchedule | None       # compiled schedule (None if empty)
+    wave_fn: object = None            # row-batched update (wave scheduler)
 
 
 class BMQSimEngine:
@@ -515,8 +560,14 @@ class BMQSimEngine:
             fkey = (plan, nv, self.cfg.use_kernel, self.cfg.gate_schedule,
                     interpret)
             fn = _stage_fn(*fkey) if plan else None
+            # the scheduled path gets the row-batched wave form too (the
+            # per-gate path has none — the pipeline runs it sequentially)
+            wave_fn = (_stage_fn_wave(plan, nv, self.cfg.use_kernel,
+                                      interpret)
+                       if plan and self.cfg.gate_schedule else None)
             sched = compile_schedule(plan, nv) if plan else None
-            bound.append(_BoundStage(layout, plan, mats, fkey, fn, sched))
+            bound.append(_BoundStage(layout, plan, mats, fkey, fn, sched,
+                                     wave_fn))
         self._bound[key] = bound
         while len(self._bound) > _BOUND_CACHE_SIZE:
             self._bound.popitem(last=False)
@@ -570,7 +621,10 @@ class BMQSimEngine:
             fn = (_stage_fn_batch(plan, nv, self.cfg.use_kernel, interpret)
                   if plan else None)
             sched = compile_schedule(plan, nv) if plan else None
-            bound.append(_BoundStage(layout, plan, mats, fkey, fn, sched))
+            # the batched stage fn is already row-batched (and tiles its
+            # lane operands in-trace for multi-group waves)
+            bound.append(_BoundStage(layout, plan, mats, fkey, fn, sched,
+                                     fn))
         self._bound_batch[key] = bound
         while len(self._bound_batch) > _BOUND_CACHE_SIZE:
             self._bound_batch.popitem(last=False)
@@ -717,7 +771,8 @@ class BMQSimEngine:
                 self.stats.n_transposes_scheduled += \
                     bs.sched.n_transposes * bs.layout.n_groups
                 sh2d, sd2h = back.h2d_bytes, back.d2h_bytes
-                pipe.run_stage(bs.layout.group_block_ids(), bs.fn, bs.mats)
+                pipe.run_stage(bs.layout.group_block_ids(), bs.fn, bs.mats,
+                               wave_fn=bs.wave_fn)
                 self.stats.per_stage_boundary_bytes.append(
                     (back.h2d_bytes - sh2d, back.d2h_bytes - sd2h))
                 if not first_done:
@@ -733,6 +788,7 @@ class BMQSimEngine:
         self.stats.t_compute += pipe.t_compute
         self.stats.t_fetch += pipe.t_fetch
         self.stats.t_compress += pipe.t_store
+        self.stats.n_group_phases += pipe.n_group_phases
         self.stats.h2d_bytes += back.h2d_bytes - h2d0
         self.stats.d2h_bytes += back.d2h_bytes - d2h0
         self.stats.n_block_decompressions += back.n_decompressions - dec0
@@ -833,7 +889,7 @@ class BMQSimEngine:
                     bs.sched.n_transposes * bs.layout.n_groups
                 sh2d, sd2h = back.h2d_bytes, back.d2h_bytes
                 pipe.run_stage(bs.layout.group_block_ids(), bs.fn, bs.mats,
-                               lane_offsets=offsets)
+                               lane_offsets=offsets, wave_fn=bs.wave_fn)
                 self.stats.per_stage_boundary_bytes.append(
                     (back.h2d_bytes - sh2d, back.d2h_bytes - sd2h))
                 if not first_done and lane_base == 0:
@@ -846,6 +902,7 @@ class BMQSimEngine:
         self.stats.t_compute += pipe.t_compute
         self.stats.t_fetch += pipe.t_fetch
         self.stats.t_compress += pipe.t_store
+        self.stats.n_group_phases += pipe.n_group_phases
         self.stats.h2d_bytes += back.h2d_bytes - h2d0
         self.stats.d2h_bytes += back.d2h_bytes - d2h0
         self.stats.n_block_decompressions += back.n_decompressions - dec0

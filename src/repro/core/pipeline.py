@@ -8,11 +8,8 @@ three phases:
     2. compute       — apply the stage's fused unitaries on-device
     3. encode/store  — compress the updated blocks back into the store
 
-:class:`StagePipeline` owns the phase orchestration — host phases run in
-worker thread pools (zlib/numpy release the GIL), device phases dispatch
-asynchronously so decode-of-group-g+1 overlaps compute-of-group-g (§4.2's
-transfer-concealed workflow) — while a :class:`CodecBackend` decides *where
-the codec runs*:
+:class:`StagePipeline` owns the phase orchestration; a
+:class:`CodecBackend` decides *where the codec runs*:
 
 ``host``   (:class:`HostCodecBackend`)   — the correctness baseline: blocks
     are fully decompressed on the host and the **raw** 2^(b+m) complex64
@@ -25,15 +22,46 @@ the codec runs*:
     the Pallas kernels quantize/dequantize next to the compute, and the
     host keeps only the lossless zlib/prescan stage and the store.
 
+The pipeline (§4.2's transfer-concealed workflow) is **wave-coalesced and
+double-buffered**:
+
+* ``pipeline_depth`` is the *wave width*: ``depth`` consecutive groups are
+  coalesced into one wave that flows through the backend's ``*_batch``
+  hooks — ONE stacked boundary crossing and ONE jitted dispatch per phase
+  cover the whole wave, amortizing the per-call dispatch overhead that
+  dominates the small-block configs (the same mechanism that makes
+  ``run_batch`` beat K sequential runs).
+* the blocking device→host wait sits in a bounded **in-flight window**:
+  wave *w*'s result is only awaited after wave *w+1*'s compute and encode
+  have been dispatched, so the await overlaps the next wave's device work
+  under JAX's async dispatch.
+* the host codec halves run on small worker pools behind a completion
+  **ready-queue**: fetches are submitted ahead (bounded lookahead) and the
+  compute loop consumes them in *completion* order, so one slow decode
+  never serializes the loop; compressed writes drain through the store
+  pool and are barriered per stage.
+
+``depth=1`` degenerates to a strictly sequential
+fetch→stage→compute→await→store loop on the caller's thread (no pools, no
+lookahead) — the reference schedule the overlap tests compare against.
+On a **single-core host** depth>1 keeps the wave coalescing (the
+dispatch-amortization win needs no threads) but also runs sequentially:
+worker pools whose context switches and GIL handoffs cost more than the
+overlap they hide are never created unless ``fetch_workers`` explicitly
+asks for them.
+
 Both backends read and write the same stored :class:`BlockSegments`
 format, so they are interchangeable mid-simulation and verifiable against
 each other (tests/test_pipeline.py).
 """
 from __future__ import annotations
 
+import os
+import queue
 import threading
 import time
 import warnings
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 
 import jax
@@ -83,17 +111,31 @@ _planes_to_complex_b = jax.jit(_planes_to_complex_batch)
 
 
 class CodecBackend:
-    """Where the block codec runs, as four phase hooks.
+    """Where the block codec runs, as five phase hooks.
 
     ``fetch_group`` / ``store_group`` are the *host* halves (called from
     worker threads; GIL-friendly numpy/zlib only — they never touch JAX).
-    ``stage_to_device`` / ``fetch_result`` are the *device* halves (called
-    from the dispatch thread); ``stage_to_device`` only dispatches — it
-    never blocks — so the pipeline can overlap it with compute.
+    The *device* halves run on the dispatch thread and are split at the
+    blocking boundary:
+
+    * ``stage_to_device``   — host staging -> device planes; dispatch only,
+      never blocks.
+    * ``dispatch_result``   — device planes -> an opaque in-flight *ticket*
+      (the encode / plane→complex conversion is dispatched async here);
+      never blocks.
+    * ``await_result``      — ticket -> host result object; this is the
+      ONLY blocking device wait in the pipeline, so the scheduler can park
+      it in the in-flight window while later waves dispatch.
+
+    ``fetch_result`` (dispatch + await back to back) remains as the
+    convenience form for sequential callers.
 
     Byte counters ``h2d_bytes`` / ``d2h_bytes`` accumulate the size of
     every array that crosses the host↔device boundary — the quantity the
-    device-resident codec exists to shrink.
+    device-resident codec exists to shrink.  Phase hooks run concurrently
+    on worker threads, so ALL counter updates are read-modify-write under
+    ``_count_lock`` — use :meth:`add_bytes` / :meth:`add_counts`, never a
+    bare ``+=``.
 
     Args:
         store: the two-level block store.
@@ -116,8 +158,8 @@ class CodecBackend:
         self.d2h_bytes = 0
         self.n_decompressions = 0
         self.n_compressions = 0
-        # host-phase hooks run in concurrent worker threads; counter
-        # updates are read-modify-write and need the lock
+        # phase hooks run in concurrent worker threads; counter updates
+        # are read-modify-write and need the lock
         self._count_lock = threading.Lock()
 
     def add_counts(self, decompressions: int = 0,
@@ -125,6 +167,13 @@ class CodecBackend:
         with self._count_lock:
             self.n_decompressions += decompressions
             self.n_compressions += compressions
+
+    def add_bytes(self, h2d: int = 0, d2h: int = 0) -> None:
+        """Locked accumulation of the boundary byte ledger (hooks may run
+        on several threads at once — a bare ``+=`` here loses updates)."""
+        with self._count_lock:
+            self.h2d_bytes += h2d
+            self.d2h_bytes += d2h
 
     # -- host block codec (also used for init/collect outside the pipeline) --
     def encode_host_block(self, key: int, amps: np.ndarray) -> None:
@@ -152,39 +201,62 @@ class CodecBackend:
         stack (async) — the stage compute's planes-resident input."""
         raise NotImplementedError
 
-    def fetch_result(self, planes_dev: jax.Array, n_blocks: int):
-        """Dispatch thread: device plane stack -> host result object
-        (blocks).  This is the pipeline's blocking boundary wait."""
+    def dispatch_result(self, planes_dev: jax.Array, n_blocks: int):
+        """Dispatch thread: device plane stack -> in-flight ticket.  The
+        device half of the encode is dispatched here (async); MUST NOT
+        block."""
         raise NotImplementedError
+
+    def await_result(self, ticket):
+        """Dispatch thread: in-flight ticket -> host result object
+        (blocks).  The pipeline's only blocking boundary wait."""
+        raise NotImplementedError
+
+    def fetch_result(self, planes_dev: jax.Array, n_blocks: int):
+        """Dispatch + await back to back (sequential convenience form)."""
+        return self.await_result(self.dispatch_result(planes_dev, n_blocks))
 
     def store_group(self, block_ids: np.ndarray, result) -> None:
         """Worker thread: host result object -> store."""
         raise NotImplementedError
 
-    # -- lane-batched phase hooks (Simulator.run_batch) ----------------------
+    # -- row-batched phase hooks ---------------------------------------------
     #
-    # ``key_rows`` is the (L, 2^m) per-lane store-key table of ONE group —
-    # row l holds lane l's keys (lane_offset + block id).  The generic
-    # implementations loop the single-lane hooks; backends override where
-    # one stacked transfer / one kernel dispatch can cover the batch.
+    # ``key_rows`` is an (R, 2^m) store-key table: one row of block keys
+    # per independent group instance.  The rows are *row-agnostic* — a
+    # ``run_batch`` feeds L lanes of one group, the wave scheduler feeds
+    # ``depth`` consecutive groups (or their lanes-x-groups product); the
+    # hooks only see rows.  The generic implementations loop the
+    # single-row hooks; backends override where one stacked transfer /
+    # one kernel dispatch can cover the batch.
 
     def fetch_group_batch(self, key_rows: np.ndarray):
-        """Worker thread: store -> host staging for all lanes of a group."""
+        """Worker thread: store -> host staging for all rows."""
         return [self.fetch_group(row) for row in key_rows]
 
     def stage_to_device_batch(self, staged, device) -> jax.Array:
-        """Dispatch thread: host staging -> (L, 2, 2^(b+m)) f32 plane
+        """Dispatch thread: host staging -> (R, 2, 2^(b+m)) f32 plane
         stacks (async) — the batched stage compute's input."""
         return jnp.stack([self.stage_to_device(s, device) for s in staged])
 
+    def dispatch_result_batch(self, planes_dev: jax.Array, n_blocks: int):
+        """Dispatch thread: (R, 2, N) device planes -> in-flight ticket
+        (async encode dispatch; MUST NOT block)."""
+        return [self.dispatch_result(planes_dev[r], n_blocks)
+                for r in range(planes_dev.shape[0])]
+
+    def await_result_batch(self, ticket):
+        """Dispatch thread: ticket -> per-row host result objects (the
+        pipeline's blocking boundary wait)."""
+        return [self.await_result(t) for t in ticket]
+
     def fetch_result_batch(self, planes_dev: jax.Array, n_blocks: int):
-        """Dispatch thread: (L, 2, N) device planes -> per-lane host
-        result objects (the pipeline's blocking boundary wait)."""
-        return [self.fetch_result(planes_dev[lane], n_blocks)
-                for lane in range(planes_dev.shape[0])]
+        """Dispatch + await back to back for a row batch."""
+        return self.await_result_batch(
+            self.dispatch_result_batch(planes_dev, n_blocks))
 
     def store_group_batch(self, key_rows: np.ndarray, results) -> None:
-        """Worker thread: per-lane host results -> store."""
+        """Worker thread: per-row host results -> store."""
         for row, res in zip(key_rows, results):
             self.store_group(row, res)
 
@@ -210,13 +282,17 @@ class HostCodecBackend(CodecBackend):
         return flat
 
     def stage_to_device(self, staged, device):
-        self.h2d_bytes += staged.nbytes
+        self.add_bytes(h2d=staged.nbytes)
         return _complex_to_planes(jax.device_put(jnp.asarray(staged), device))
 
-    def fetch_result(self, planes_dev, n_blocks):
-        # complex64 is re-materialized on device, then fetched raw
-        out = np.asarray(_planes_to_complex(planes_dev))  # blocking wait
-        self.d2h_bytes += out.nbytes
+    def dispatch_result(self, planes_dev, n_blocks):
+        # complex64 is re-materialized on device (async dispatch); the
+        # raw fetch blocks in await_result
+        return _planes_to_complex(planes_dev)
+
+    def await_result(self, ticket):
+        out = np.asarray(ticket)                  # blocking wait
+        self.add_bytes(d2h=out.nbytes)
         return out
 
     def store_group(self, block_ids, result):
@@ -225,28 +301,31 @@ class HostCodecBackend(CodecBackend):
             self.encode_host_block(int(bid), blocks[i])
         self.add_counts(compressions=len(block_ids))
 
-    # -- lane-batched overrides: one stacked boundary crossing per group --
+    # -- row-batched overrides: one stacked boundary crossing per wave --
     def fetch_group_batch(self, key_rows):
-        lanes, n_blocks = key_rows.shape
-        flat = np.empty((lanes, n_blocks * self.bsz), dtype=np.complex64)
-        for lane, row in enumerate(key_rows):
+        rows, n_blocks = key_rows.shape
+        flat = np.empty((rows, n_blocks * self.bsz), dtype=np.complex64)
+        for r, row in enumerate(key_rows):
             for i, bid in enumerate(row):
-                flat[lane, i * self.bsz:(i + 1) * self.bsz] = \
+                flat[r, i * self.bsz:(i + 1) * self.bsz] = \
                     self.decode_host_block(int(bid))
         self.add_counts(decompressions=key_rows.size)
         return flat
 
     def stage_to_device_batch(self, staged, device):
-        self.h2d_bytes += staged.nbytes
+        self.add_bytes(h2d=staged.nbytes)
         return _complex_to_planes_b(jax.device_put(jnp.asarray(staged),
                                                    device))
 
-    def fetch_result_batch(self, planes_dev, n_blocks):
-        out = np.asarray(_planes_to_complex_b(planes_dev))  # blocking wait
-        self.d2h_bytes += out.nbytes
-        return out                     # (L, 2^(b+m)) complex64
+    def dispatch_result_batch(self, planes_dev, n_blocks):
+        return _planes_to_complex_b(planes_dev)   # async dispatch
 
-    # store_group_batch: the base per-lane loop is already right — the
+    def await_result_batch(self, ticket):
+        out = np.asarray(ticket)                  # blocking wait
+        self.add_bytes(d2h=out.nbytes)
+        return out                     # (R, 2^(b+m)) complex64
+
+    # store_group_batch: the base per-row loop is already right — the
     # host encode is per-block CPU work with nothing to batch
 
 
@@ -284,7 +363,7 @@ class DeviceCodecBackend(CodecBackend):
         wire_idx = []
         for i, (kind, payload) in enumerate(staged):
             if kind == "raw":
-                self.h2d_bytes += payload.nbytes
+                self.add_bytes(h2d=payload.nbytes)
                 parts[i] = _complex_to_planes(
                     jax.device_put(jnp.asarray(payload), device))
             else:
@@ -295,17 +374,21 @@ class DeviceCodecBackend(CodecBackend):
             blocks, moved = decode_blocks_planes(
                 [staged[i][1] for i in wire_idx], self.bsz, self.params,
                 device, interpret=self.interpret)
-            self.h2d_bytes += moved
+            self.add_bytes(h2d=moved)
             for j, i in enumerate(wire_idx):
                 parts[i] = blocks[j]
         return (jnp.concatenate(parts, axis=1) if len(parts) > 1
                 else parts[0])
 
-    def fetch_result(self, planes_dev, n_blocks):
-        encoded = encode_group_planes(planes_dev, n_blocks, self.params,
-                                      interpret=self.interpret)
-        wire, moved = fetch_group_wire(encoded)   # blocks until done
-        self.d2h_bytes += moved
+    def dispatch_result(self, planes_dev, n_blocks):
+        # the quantize/pack kernels launch here (async); only the wire
+        # fetch in await_result blocks
+        return encode_group_planes(planes_dev, n_blocks, self.params,
+                                   interpret=self.interpret)
+
+    def await_result(self, ticket):
+        wire, moved = fetch_group_wire(ticket)    # blocks until done
+        self.add_bytes(d2h=moved)
         return wire
 
     def store_group(self, block_ids, result):
@@ -316,44 +399,48 @@ class DeviceCodecBackend(CodecBackend):
                                            params=self.params))
         self.add_counts(compressions=len(block_ids))
 
-    # -- lane-batched overrides: every lane's wire shares one codec
+    # -- row-batched overrides: every row's wire shares one codec
     # dispatch (the per-call decode/encode launch is the dominant cost on
-    # a dispatch-bound config, so K lanes must not pay it K times) -------
+    # a dispatch-bound config, so R rows must not pay it R times) --------
     def stage_to_device_batch(self, staged, device):
         parts = [[None] * len(row) for row in staged]
         wire, where = [], []
-        for lane, row in enumerate(staged):
+        for r, row in enumerate(staged):
             for i, (kind, payload) in enumerate(row):
                 if kind == "raw":
-                    self.h2d_bytes += payload.nbytes
-                    parts[lane][i] = _complex_to_planes(
+                    self.add_bytes(h2d=payload.nbytes)
+                    parts[r][i] = _complex_to_planes(
                         jax.device_put(jnp.asarray(payload), device))
                 else:
                     wire.append(payload)
-                    where.append((lane, i))
+                    where.append((r, i))
         if wire:
             blocks, moved = decode_blocks_planes(
                 wire, self.bsz, self.params, device,
                 interpret=self.interpret)
-            self.h2d_bytes += moved
-            for j, (lane, i) in enumerate(where):
-                parts[lane][i] = blocks[j]
+            self.add_bytes(h2d=moved)
+            for j, (r, i) in enumerate(where):
+                parts[r][i] = blocks[j]
         return jnp.stack([
             jnp.concatenate(row, axis=1) if len(row) > 1 else row[0]
             for row in parts])
 
-    def fetch_result_batch(self, planes_dev, n_blocks):
-        lanes = planes_dev.shape[0]
-        # lane-major block order: (L, 2, N) -> (2, L*N), so one encode
-        # dispatch covers every lane's blocks and the wire list splits
-        # back per lane below
+    def dispatch_result_batch(self, planes_dev, n_blocks):
+        rows = planes_dev.shape[0]
+        # row-major block order: (R, 2, N) -> (2, R*N), so one encode
+        # dispatch covers every row's blocks and the wire list splits
+        # back per row in await_result_batch
         flat = jnp.transpose(planes_dev, (1, 0, 2)).reshape(2, -1)
-        encoded = encode_group_planes(flat, lanes * n_blocks, self.params,
+        encoded = encode_group_planes(flat, rows * n_blocks, self.params,
                                       interpret=self.interpret)
+        return (encoded, rows, n_blocks)
+
+    def await_result_batch(self, ticket):
+        encoded, rows, n_blocks = ticket
         wire, moved = fetch_group_wire(encoded)   # blocks until done
-        self.d2h_bytes += moved
-        return [wire[lane * n_blocks:(lane + 1) * n_blocks]
-                for lane in range(lanes)]
+        self.add_bytes(d2h=moved)
+        return [wire[r * n_blocks:(r + 1) * n_blocks]
+                for r in range(rows)]
 
 
 def make_backend(name: str, store: BlockStore, params: PwRelParams,
@@ -378,42 +465,93 @@ def make_backend(name: str, store: BlockStore, params: PwRelParams,
                      "(expected 'host' or 'device')")
 
 
+#: fetch lookahead beyond the wave being computed (waves, not groups):
+#: one decoding while one is staged is the double buffer; more only adds
+#: host staging memory without hiding additional latency
+_FETCH_LOOKAHEAD = 2
+
+#: in-flight results: wave w's blocking await runs only after wave w+1's
+#: compute + encode have been dispatched (the double-buffered boundary)
+_INFLIGHT_WINDOW = 2
+
+
 class StagePipeline:
     """Orchestrates the per-group load → compute → store loop of a stage.
 
-    ``depth`` groups are fetched ahead in the decode pool while compressed
-    writes drain through the store pool (§4.2's pipeline).  On the device
-    side, the decode of the next group is dispatched *before* the current
-    group's result is fetched, so it overlaps compute under JAX's async
-    dispatch.
+    ``depth`` is the wave width: ``depth`` consecutive groups coalesce
+    into one row-batched dispatch through the backend's ``*_batch`` hooks,
+    and up to two waves are in flight at once — wave *w*'s blocking
+    device→host wait (``await_result``) runs *after* wave *w+1*'s compute
+    and encode dispatches, so it hides under device work, while the host
+    codec halves run on the fetch/store worker pools behind a completion
+    ready-queue (see the module docs).  ``depth=1`` is the strictly
+    sequential reference schedule.
 
     Use as a context manager (owns the worker pools); call
     :meth:`run_stage` once per partition stage, then read the counters off
-    ``backend`` and the ``t_*`` attributes.
+    ``backend`` and the ``t_*`` attributes:
+
+    ``t_load``    host fetch/decode time (worker threads)
+    ``t_compute`` H2D staging + compute + encode *dispatch* time — async
+                  dispatch only, never a device wait
+    ``t_fetch``   blocking ``await_result`` wait at the D2H boundary
+    ``t_store``   host encode/store time (worker threads)
+
+    ``n_group_phases`` counts group×stage phase executions — the
+    denominator that turns the ``t_*`` sums into the per-group
+    :class:`~repro.core.planner.PipelineCalibration` the planner's
+    depth model consumes.
     """
 
     def __init__(self, backend: CodecBackend, depth: int = 2,
-                 devices: list | None = None):
+                 devices: list | None = None,
+                 fetch_workers: int | None = None):
         self.backend = backend
         self.depth = max(1, depth)
         self.devices = devices or [jax.devices()[0]]
+        # fetch pool width.  None = adaptive: one worker per spare core,
+        # capped at the lookahead — and NO pools at all on a single-core
+        # host, where waves still coalesce but run on the caller's
+        # thread (extra decode threads only thrash the dispatch thread's
+        # GIL slice).  An explicit >= 1 forces the threaded overlap
+        # scheduler regardless of core count (the overlap tests use
+        # this); an explicit 0 forces the coalescing-only wave loop.
+        self.fetch_workers = fetch_workers
         self.t_load = 0.0
         self.t_compute = 0.0     # h2d staging + kernel dispatch (non-blocking)
         self.t_fetch = 0.0       # blocking result wait at the d2h boundary
         self.t_store = 0.0
+        self.n_group_phases = 0
         self._t_lock = threading.Lock()  # _load/_store run concurrently
         self._dec_pool: ThreadPoolExecutor | None = None
         self._com_pool: ThreadPoolExecutor | None = None
+        self._entered = False
 
     def __enter__(self) -> "StagePipeline":
-        self._dec_pool = ThreadPoolExecutor(max_workers=self.depth)
-        self._com_pool = ThreadPoolExecutor(max_workers=self.depth)
+        # the threaded overlap scheduler only engages when spare cores
+        # exist to run the workers (or the caller forces a pool width):
+        # on a single-core host the context switches and GIL handoffs
+        # cost more than the overlap hides, and wave *coalescing* — the
+        # actual dispatch-amortization win — doesn't need threads.  The
+        # fetch pool is lookahead-wide so the ready-queue can consume
+        # waves in completion order (a slow decode never serializes the
+        # loop); one store worker drains the encode queue.
+        if self.depth > 1:
+            nw = self.fetch_workers
+            if nw is None and (os.cpu_count() or 1) > 1:
+                nw = min(_FETCH_LOOKAHEAD, os.cpu_count() - 1)
+            if nw:
+                self._dec_pool = ThreadPoolExecutor(max_workers=nw)
+                self._com_pool = ThreadPoolExecutor(max_workers=1)
+        self._entered = True
         return self
 
     def __exit__(self, *exc) -> None:
-        self._dec_pool.shutdown(wait=True)
-        self._com_pool.shutdown(wait=True)
+        if self._dec_pool is not None:
+            self._dec_pool.shutdown(wait=True)
+            self._com_pool.shutdown(wait=True)
         self._dec_pool = self._com_pool = None
+        self._entered = False
 
     # -- timed phase wrappers (run inside worker threads) ---------------------
     def _load(self, fetch, keys):
@@ -431,61 +569,161 @@ class StagePipeline:
         with self._t_lock:
             self.t_store += dt
 
-    def _device_for(self, g: int):
-        return self.devices[g % len(self.devices)]
+    def _device_for(self, w: int):
+        return self.devices[w % len(self.devices)]
 
     def run_stage(self, block_ids: np.ndarray, fn, mats,
-                  lane_offsets: np.ndarray | None = None) -> None:
+                  lane_offsets: np.ndarray | None = None,
+                  wave_fn=None) -> None:
         """Run one stage: ``block_ids`` is the (n_groups, 2^m) layout table,
-        ``fn`` the jitted group-update function, ``mats`` its operands.
+        ``fn`` the jitted single-group update function, ``mats`` its
+        operands.
 
-        ``lane_offsets`` switches on the batched path: per group, the
-        (L, 2^m) key table ``lane_offsets[:, None] + block_ids[g]`` flows
-        through the backend's ``*_batch`` hooks and ``fn`` updates the
-        (L, 2, 2^(b+m)) lane stack in one dispatch.
+        ``wave_fn`` is the row-batched form of the stage update ((R, 2,
+        2^(b+m)) planes -> same; operands broadcast/tiled in-trace) — it
+        enables the wave-coalesced scheduler.  Without it (the legacy
+        per-gate path has no batched form) the stage runs strictly
+        sequentially through the single-group hooks.
+
+        ``lane_offsets`` switches on the lane-batched path: each wave's
+        key table stacks ``lane_offsets[:, None] + block_ids[g]`` for the
+        wave's groups (groups-major), and ``wave_fn`` updates the
+        (depth·L, 2, 2^(b+m)) row stack in one dispatch.
         """
-        assert self._dec_pool is not None, "use StagePipeline as a context manager"
+        assert self._entered, "use StagePipeline as a context manager"
+        n_groups, n_blocks = block_ids.shape
+        self.n_group_phases += n_groups
+        if wave_fn is None:
+            self._run_sequential_single(block_ids, fn, mats, lane_offsets)
+            return
+
+        back = self.backend
+        W = min(self.depth, n_groups)
+        wave_keys = []
+        for lo in range(0, n_groups, W):
+            gids = block_ids[lo:lo + W]
+            if lane_offsets is None:
+                wave_keys.append(gids)              # rows = groups
+            else:                                   # rows = groups x lanes
+                wave_keys.append(np.concatenate(
+                    [lane_offsets[:, None] + row[None, :] for row in gids]))
+        if self._dec_pool is None:
+            # sequential wave loop: depth 1, or a coalescing-only host
+            # (no spare cores for the overlap workers) — same waves,
+            # same batch hooks, caller's thread
+            for keys in wave_keys:
+                staged = self._load(back.fetch_group_batch, keys)
+                t0 = time.perf_counter()
+                planes = back.stage_to_device_batch(staged,
+                                                    self._device_for(0))
+                out = wave_fn(planes, *mats)
+                ticket = back.dispatch_result_batch(out, n_blocks)
+                self.t_compute += time.perf_counter() - t0
+                t0 = time.perf_counter()
+                result = back.await_result_batch(ticket)
+                self.t_fetch += time.perf_counter() - t0
+                self._store(back.store_group_batch, keys, result)
+            return
+        self._run_overlapped(wave_keys, wave_fn, mats, n_blocks)
+
+    # -- strictly sequential fallback (no batched stage fn) -------------------
+    def _run_sequential_single(self, block_ids, fn, mats, lane_offsets):
+        """Legacy per-gate path: one group per dispatch, in order, on the
+        caller's thread (kept for the side-by-side benchmark — it has no
+        row-batched stage function to coalesce waves with)."""
         back = self.backend
         n_groups, n_blocks = block_ids.shape
         if lane_offsets is None:
             fetch, to_dev = back.fetch_group, back.stage_to_device
-            fetch_res, store = back.fetch_result, back.store_group
+            dispatch, await_ = back.dispatch_result, back.await_result
+            store = back.store_group
             group_keys = [block_ids[g] for g in range(n_groups)]
         else:
             fetch, to_dev = back.fetch_group_batch, back.stage_to_device_batch
-            fetch_res, store = back.fetch_result_batch, back.store_group_batch
+            dispatch, await_ = (back.dispatch_result_batch,
+                                back.await_result_batch)
+            store = back.store_group_batch
             group_keys = [lane_offsets[:, None] + block_ids[g][None, :]
                           for g in range(n_groups)]
-        pending_load = {
-            g: self._dec_pool.submit(self._load, fetch, group_keys[g])
-            for g in range(min(self.depth, n_groups))
-        }
-        staged_dev: dict[int, jax.Array] = {}
-        pending_save = []
         for g in range(n_groups):
-            amps_dev = staged_dev.pop(g, None)
-            if amps_dev is None:
-                staged = pending_load.pop(g).result()
-                t0 = time.perf_counter()
-                amps_dev = to_dev(staged, self._device_for(g))
-                self.t_compute += time.perf_counter() - t0
-            nxt = g + self.depth
-            if nxt < n_groups:
-                pending_load[nxt] = self._dec_pool.submit(
-                    self._load, fetch, group_keys[nxt])
+            staged = self._load(fetch, group_keys[g])
             t0 = time.perf_counter()
-            out = fn(amps_dev, *mats)                  # async dispatch
-            # overlap: dispatch the next group's decode behind the compute
-            nxt = g + 1
-            if nxt in pending_load and pending_load[nxt].done():
-                staged_dev[nxt] = to_dev(pending_load.pop(nxt).result(),
-                                         self._device_for(nxt))
+            amps_dev = to_dev(staged, self._device_for(g))
+            out = fn(amps_dev, *mats)
+            ticket = dispatch(out, n_blocks)
             self.t_compute += time.perf_counter() - t0
             t0 = time.perf_counter()
-            result = fetch_res(out, n_blocks)
+            result = await_(ticket)
             self.t_fetch += time.perf_counter() - t0
-            pending_save.append(
-                self._com_pool.submit(self._store, store, group_keys[g],
-                                      result))
-        for fut in pending_save:               # stage barrier (§4.1 semantics)
+            self._store(store, group_keys[g], result)
+
+    # -- the double-buffered wave loop ---------------------------------------
+    def _run_overlapped(self, wave_keys, wave_fn, mats, n_blocks) -> None:
+        back = self.backend
+        n_waves = len(wave_keys)
+        ready: queue.SimpleQueue = queue.SimpleQueue()
+        outstanding: dict[int, object] = {}
+        submitted = 0
+
+        def submit_next():
+            nonlocal submitted
+            if submitted < n_waves:
+                w = submitted
+                submitted += 1
+                fut = self._dec_pool.submit(self._load,
+                                            back.fetch_group_batch,
+                                            wave_keys[w])
+                outstanding[w] = fut
+                fut.add_done_callback(lambda _f, w=w: ready.put(w))
+
+        in_flight: deque = deque()     # (wave, ticket) dispatched, unawaited
+        pending_save = []
+        try:
+            for _ in range(min(1 + _FETCH_LOOKAHEAD, n_waves)):
+                submit_next()
+            for _ in range(n_waves):
+                # completion-order ready-queue: take whichever lookahead
+                # fetch finished first — a slow decode never serializes
+                # the loop behind wave order
+                w = ready.get()
+                staged = outstanding.pop(w).result()
+                t0 = time.perf_counter()
+                planes = back.stage_to_device_batch(staged,
+                                                    self._device_for(w))
+                out = wave_fn(planes, *mats)
+                ticket = back.dispatch_result_batch(out, n_blocks)
+                self.t_compute += time.perf_counter() - t0
+                submit_next()          # keep the fetch lookahead full
+                in_flight.append((w, ticket))
+                if len(in_flight) >= _INFLIGHT_WINDOW:
+                    # double buffer: wave w is computing asynchronously
+                    # while this (older) wave's blocking wait drains
+                    ow, oticket = in_flight.popleft()
+                    t0 = time.perf_counter()
+                    result = back.await_result_batch(oticket)
+                    self.t_fetch += time.perf_counter() - t0
+                    pending_save.append(self._com_pool.submit(
+                        self._store, back.store_group_batch,
+                        wave_keys[ow], result))
+            while in_flight:           # drain the window
+                ow, oticket = in_flight.popleft()
+                t0 = time.perf_counter()
+                result = back.await_result_batch(oticket)
+                self.t_fetch += time.perf_counter() - t0
+                pending_save.append(self._com_pool.submit(
+                    self._store, back.store_group_batch,
+                    wave_keys[ow], result))
+        except BaseException:
+            # fail fast without deadlocking the pools: drop queued
+            # fetches, let running ones finish (shutdown waits), and
+            # surface the ORIGINAL error over any secondary store failure
+            for fut in outstanding.values():
+                fut.cancel()
+            for fut in pending_save:
+                try:
+                    fut.result()
+                except Exception:
+                    pass
+            raise
+        for fut in pending_save:       # stage barrier (§4.1 semantics)
             fut.result()

@@ -139,6 +139,10 @@ class PlanPredictions:
     boundary_bytes: int              # total h2d + d2h across stages
     n_transposes: int                # group-weighted, compiled schedules
     n_transposes_naive: int
+    #: predicted whole-run speedup of the plan's pipeline_depth over the
+    #: strictly sequential depth-1 schedule (the planner's overlap model,
+    #: :func:`repro.core.planner.predict_depth_speedup`); 1.0 at depth 1
+    depth_speedup: float = 1.0
 
     @property
     def working_set_bytes(self) -> int:
@@ -219,6 +223,8 @@ class ExecutionPlan:
             f"  predicted : boundary {p.boundary_bytes / mib:.2f} MiB "
             f"over {self.n_stages} stages; group transposes "
             f"{p.n_transposes} scheduled vs {p.n_transposes_naive} per-gate",
+            f"  predicted : pipeline depth {self.pipeline_depth} overlap "
+            f"speedup {p.depth_speedup:.2f}x vs sequential",
         ]
         for sp in self.stages[:max_stages]:
             lo, hi = sp.gate_slice
@@ -259,6 +265,7 @@ class ExecutionPlan:
                 "boundary_bytes": self.predicted.boundary_bytes,
                 "n_transposes": self.predicted.n_transposes,
                 "n_transposes_naive": self.predicted.n_transposes_naive,
+                "depth_speedup": self.predicted.depth_speedup,
             },
             "stages": [{
                 "index": sp.index,
@@ -293,7 +300,8 @@ class ExecutionPlan:
                 n_transposes_naive=sd["n_transposes_naive"],
                 est_h2d_bytes=sd["est_h2d_bytes"],
                 est_d2h_bytes=sd["est_d2h_bytes"]))
-        pd = d["predicted"]
+        pd = dict(d["predicted"])
+        pd.setdefault("depth_speedup", 1.0)   # pre-v6 plan dumps
         return cls(
             circuit_fp=d["circuit_fp"], n_qubits=n, local_bits=b,
             inner_size=d["inner_size"], pipeline_depth=d["pipeline_depth"],

@@ -37,7 +37,7 @@ from __future__ import annotations
 
 import math
 import warnings
-from dataclasses import replace
+from dataclasses import dataclass, replace
 
 from .fusion import FusedGate, fuse_gates
 from .groups import GroupLayout
@@ -46,6 +46,8 @@ from .plan import ExecutionPlan, PlanPredictions, StagePlan
 from .schedule import compile_schedule
 
 __all__ = ["DEFAULT_INNER_SIZE", "DEFAULT_PIPELINE_DEPTH",
+           "PipelineCalibration", "DEFAULT_CALIBRATION",
+           "predict_depth_speedup",
            "estimate_bytes_per_amp", "wire_bytes_per_block",
            "resolve_config", "fuse_stage", "fuse_stage_lanes",
            "max_feasible_lanes", "assemble_plan"]
@@ -67,6 +69,92 @@ _INNER_CANDIDATES = (2, 3, 4)
 #: blocks concentrate within ~2^40 of their max; wider tails quantize to
 #: the exact-zero escape and compress away)
 _SPAN_LOG2 = 40.0
+
+
+@dataclass(frozen=True)
+class PipelineCalibration:
+    """Measured (or assumed) per-group phase costs of the stage pipeline
+    — the inputs of :func:`predict_depth_speedup`.
+
+    The four timings are *per group-phase* (any consistent unit — only
+    ratios matter): ``t_load`` host fetch/decode, ``t_compute`` the
+    H2D-staging + compute + encode *dispatch* cost, ``t_fetch`` the
+    blocking device→host await, ``t_store`` host encode/store.  The
+    engine records them into ``SimStats`` and hands them back via
+    :meth:`SimStats.pipeline_calibration`.
+
+    ``measured`` optionally pins whole-depth speedups observed on the
+    target machine (``((depth, speedup), ...)``, e.g. transcribed from a
+    benchmark dump): a measurement always beats the model, so a recorded
+    losing profile can never be re-chosen by the auto-tuner.
+    """
+
+    t_load: float
+    t_compute: float
+    t_fetch: float
+    t_store: float
+    measured: tuple = ()
+
+    def measured_speedup(self, depth: int) -> float | None:
+        for d, s in self.measured:
+            if d == depth:
+                return s
+        return None
+
+
+#: default profile of the scheduled planes path on the dev box (BENCH_6
+#: shape): the per-group cost is dominated by the host codec halves and
+#: the per-dispatch overhead; the blocking await is short because the
+#: device compute drains while the host codec works
+DEFAULT_CALIBRATION = PipelineCalibration(
+    t_load=1.0, t_compute=0.45, t_fetch=0.1, t_store=0.9)
+
+#: fractional growth of the blocking await per coalesced wave: a wave of
+#: d groups awaits one d-times-larger result, which is not entirely free
+_WAVE_TAX = 0.25
+
+
+def predict_depth_speedup(depth: int,
+                          calibration: PipelineCalibration | None = None
+                          ) -> float:
+    """Predicted whole-run speedup of ``pipeline_depth=depth`` over the
+    strictly sequential ``depth=1`` schedule.
+
+    Model of the wave-coalesced pipeline (core/pipeline.py): a wave of
+    ``d`` groups pays the host codec per group (``t_load`` + ``t_store``
+    do not shrink), ONE compute/encode dispatch for the whole wave
+    (``t_compute / d`` per group — the amortization that makes depth
+    win on dispatch-bound configs), and a slightly larger blocking
+    await (``t_fetch`` grown by ``_WAVE_TAX`` at full coalescing).  No
+    parallel-speedup credit is taken for the worker threads — on a
+    single-core host there is none to take, so the model stays
+    conservative.  A ``calibration.measured`` entry for ``depth``
+    overrides the model entirely.
+    """
+    cal = calibration if calibration is not None else DEFAULT_CALIBRATION
+    m = cal.measured_speedup(depth)
+    if m is not None:
+        return m
+    if depth <= 1:
+        return 1.0
+    serial = cal.t_load + cal.t_compute + cal.t_fetch + cal.t_store
+    if serial <= 0:
+        return 1.0
+    piped = (cal.t_load + cal.t_store + cal.t_compute / depth
+             + cal.t_fetch * (1.0 + _WAVE_TAX * (1.0 - 1.0 / depth)))
+    return serial / piped
+
+
+def _auto_depth(cands, calibration) -> int:
+    """Deepest candidate whose predicted speedup is >= 1 (depth 1 is
+    always admissible — the auto-tuner must never pick a losing depth)."""
+    best = 1
+    for d in cands:
+        if d is None:
+            continue
+        if d <= 1 or predict_depth_speedup(d, calibration) >= 1.0:
+            best = max(best, d)
+    return best
 
 
 def estimate_bytes_per_amp(b_r: float, compression: bool = True) -> float:
@@ -111,9 +199,13 @@ def _predict_working_set(n: int, b: int, max_m: int, depth: int,
     Store peak: the whole compressed state plus ``depth + 1`` groups'
     worth of fresh blobs coexisting with the blocks they replace (the
     store binds the new blob before releasing the old).  Pipeline
-    staging: decoded group arrays held by the decode-ahead workers and
-    the in-flight result — complex64-sized, the host backend's (larger)
-    footprint, so the bound holds for both backends.
+    staging: the wave scheduler holds, per ``depth``-group wave, up to
+    two waves on-device (one computing, one decoded ahead), two
+    lookahead waves in the fetch worker, and one in-flight result — ~5
+    waves of complex64-sized group arrays at ``depth >= 2``, 3 group
+    arrays in the strictly sequential ``depth=1`` schedule.  That is the
+    host backend's (larger) footprint, so the bound holds for both
+    backends.
 
     ``lanes`` is the batch factor K: a batched run keeps K compressed
     state copies in the store and stages K-lane group stacks through the
@@ -124,7 +216,8 @@ def _predict_working_set(n: int, b: int, max_m: int, depth: int,
     state = lanes * (int((1 << n) * bpa) + n_blocks * _BLOCK_OVERHEAD)
     group = 1 << (b + max_m)
     peak_ram = state + (depth + 1) * int(group * bpa) * lanes
-    pipeline = (depth + 2) * group * 8 * lanes
+    waves = 5 * depth if depth > 1 else 3
+    pipeline = waves * group * 8 * lanes
     return peak_ram, pipeline
 
 
@@ -164,7 +257,8 @@ def _transpose_cost(circuit, b: int, m: int, part, max_fused: int) -> int:
     return cost
 
 
-def resolve_config(circuit, config, n_devices: int = 1):
+def resolve_config(circuit, config, n_devices: int = 1,
+                   calibration: PipelineCalibration | None = None):
     """Concrete engine knobs from a possibly-auto :class:`EngineConfig`.
 
     Returns ``(resolved_config, auto_tuned, partition)`` — ``partition``
@@ -175,6 +269,12 @@ def resolve_config(circuit, config, n_devices: int = 1):
     to their defaults, and ``memory_budget_bytes`` always flows into the
     store's ``ram_budget_bytes`` backstop unless one was given
     explicitly.
+
+    An auto ``pipeline_depth`` consults :func:`predict_depth_speedup`
+    under ``calibration`` (default profile when None; pass
+    ``SimStats.pipeline_calibration()`` to re-plan from measurements):
+    the tuner never selects a depth whose predicted speedup is < 1 — an
+    explicitly requested depth is always honored verbatim.
     """
     budget = config.memory_budget_bytes
     ram_budget = (config.ram_budget_bytes
@@ -186,7 +286,8 @@ def resolve_config(circuit, config, n_devices: int = 1):
                         else DEFAULT_INNER_SIZE),
             pipeline_depth=(config.pipeline_depth
                             if config.pipeline_depth is not None
-                            else DEFAULT_PIPELINE_DEPTH),
+                            else _auto_depth((DEFAULT_PIPELINE_DEPTH, 1),
+                                             calibration)),
             ram_budget_bytes=ram_budget), False, None
 
     n = circuit.n_qubits
@@ -196,6 +297,8 @@ def resolve_config(circuit, config, n_devices: int = 1):
             m = config.inner_size
         if config.pipeline_depth is not None:
             depth = config.pipeline_depth
+        else:
+            depth = _auto_depth((depth, 1), calibration)
         return replace(config, local_bits=b, inner_size=m,
                        pipeline_depth=depth,
                        ram_budget_bytes=ram_budget), True, None
@@ -204,9 +307,15 @@ def resolve_config(circuit, config, n_devices: int = 1):
     lanes = max(1, config.batch)          # provision for the batch factor
     inner_cands = ((config.inner_size,) if config.inner_size is not None
                    else _INNER_CANDIDATES)
-    depth_cands = ((config.pipeline_depth,)
-                   if config.pipeline_depth is not None
-                   else (DEFAULT_PIPELINE_DEPTH, 1))
+    if config.pipeline_depth is not None:
+        depth_cands = (config.pipeline_depth,)
+    else:
+        # deepest-first, losing depths dropped up front: the per-(b, m)
+        # scan below keeps "deepest fitting pipeline wins" semantics
+        # among depths the overlap model actually endorses
+        depth_cands = tuple(
+            d for d in (DEFAULT_PIPELINE_DEPTH, 1)
+            if d <= 1 or predict_depth_speedup(d, calibration) >= 1.0)
     feasible: list[tuple] = []
     fallback = None                       # least-working-set candidate
     for b in range(min(n, MAX_AUTO_LOCAL_BITS), 0, -1):
@@ -351,7 +460,8 @@ def assemble_plan(circuit_fp: str, cfg, partition, stage_plans,
         state_bytes=int((1 << n) * bpa) + (1 << (n - b)) * _BLOCK_OVERHEAD,
         peak_ram_bytes=peak_ram, pipeline_bytes=pipeline,
         boundary_bytes=tot_boundary,
-        n_transposes=tot_t, n_transposes_naive=tot_tn)
+        n_transposes=tot_t, n_transposes_naive=tot_tn,
+        depth_speedup=predict_depth_speedup(cfg.pipeline_depth))
     return ExecutionPlan(
         circuit_fp=circuit_fp, n_qubits=n, local_bits=b,
         inner_size=cfg.inner_size, pipeline_depth=cfg.pipeline_depth,

@@ -265,13 +265,31 @@ def test_compare_skips_micro_rows_and_disjoint_keys(tmp_path):
     assert bench_compare.main([base, new]) == 0
 
 
+def test_compare_gates_speedup_rows(tmp_path):
+    """``*_speedup`` rows gate in the opposite direction: a depth-2
+    overlap ratio collapsing back toward the pre-wave-coalescing losing
+    range fails, mild jitter passes, and improvements never gate."""
+    base = _bench_json(tmp_path, "base.json",
+                       {"run_s": 2.0, "depth_2_speedup": 1.10})
+    held = _bench_json(tmp_path, "held.json",
+                       {"run_s": 2.1, "depth_2_speedup": 0.95})
+    better = _bench_json(tmp_path, "better.json",
+                         {"run_s": 2.0, "depth_2_speedup": 1.40})
+    lost = _bench_json(tmp_path, "lost.json",
+                       {"run_s": 2.0, "depth_2_speedup": 0.58})
+    assert bench_compare.main([base, held]) == 0
+    assert bench_compare.main([base, better]) == 0
+    assert bench_compare.main([base, lost]) != 0
+
+
 def test_compare_gate_on_committed_baselines():
-    """The real pair the CI job diffs: the committed perf-trajectory
-    baselines must pass their own gate."""
+    """The real pair the CI job diffs: the two newest committed
+    perf-trajectory baselines must pass their own gate."""
     import pathlib
     root = pathlib.Path(__file__).resolve().parent.parent
-    base = root / "BENCH_4.json"
-    cur = root / "BENCH_5.json"
-    if not (base.exists() and cur.exists()):
+    benches = sorted(root.glob("BENCH_*.json"),
+                     key=lambda p: int(p.stem.split("_")[1]))
+    if len(benches) < 2:
         pytest.skip("committed BENCH baselines not present")
+    base, cur = benches[-2], benches[-1]
     assert bench_compare.main([str(base), str(cur)]) == 0

@@ -139,6 +139,74 @@ def test_planes_path_matches_dense_on_random_circuits():
     prop()
 
 
+# -- pipeline depth is a pure *scheduling* knob ------------------------------
+#
+# The wave-coalesced scheduler must never change the answer.  Host backend
+# states are bitwise identical across depths (same jitted ops, same block
+# codec, only the dispatch grouping differs); the device codec's batched
+# encode launches different kernel grids, so it gets a TV-distance /
+# fidelity bound instead.
+
+def _depth_states(qc, backend, depth, batched):
+    from repro.core import Simulator
+
+    cfg = EngineConfig(local_bits=3, inner_size=2, b_r=1e-3,
+                       codec_backend=backend, pipeline_depth=depth)
+    if batched:
+        with Simulator(qc, cfg) as sim:
+            batch = sim.run_batch([None] * 2)
+            return [np.asarray(lane.statevector()) for lane in batch]
+    state, _ = simulate_bmqsim(qc, cfg)
+    return [np.asarray(state)]
+
+
+def _tv_distance(a, b):
+    return 0.5 * np.sum(np.abs(np.abs(a.astype(np.complex128)) ** 2
+                               - np.abs(b.astype(np.complex128)) ** 2))
+
+
+def _check_depth_invariance(n, n_gates, seed, backend, batched):
+    from repro.core import random_circuit
+
+    qc = random_circuit(n, n_gates, seed=seed)
+    ref = _depth_states(qc, backend, 1, batched)
+    for depth in (2, 4):
+        got = _depth_states(qc, backend, depth, batched)
+        assert len(got) == len(ref)
+        for a, b in zip(ref, got):
+            if backend == "host":
+                np.testing.assert_array_equal(a, b)       # bitwise
+            else:
+                f = fidelity(a.astype(np.complex128), b.astype(np.complex128))
+                assert f >= 1 - 1e-7
+                assert _tv_distance(a, b) <= 1e-5
+
+
+@pytest.mark.parametrize("batched", [False, True])
+@pytest.mark.parametrize("backend", ["host", "device"])
+def test_depth_invariant_smoke(backend, batched):
+    """Always-on deterministic slice of the depth-invariance property."""
+    _check_depth_invariance(6, 12, seed=3, backend=backend, batched=batched)
+
+
+def test_final_state_invariant_across_pipeline_depths():
+    """Hypothesis property: random circuits, depth {1, 2, 4} x backend
+    {host, device} x {single-lane, lane-batched} all agree (bitwise on
+    host, TV/fidelity on device)."""
+    pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=8, deadline=None)
+    @given(n=st.integers(5, 7), n_gates=st.integers(3, 18),
+           seed=st.integers(0, 10_000),
+           backend=st.sampled_from(["host", "device"]),
+           batched=st.booleans())
+    def prop(n, n_gates, seed, backend, batched):
+        _check_depth_invariance(n, n_gates, seed, backend, batched)
+
+    prop()
+
+
 def test_device_codec_blocks_readable_by_host_codec():
     """Blocks written by the device encoder are bit-identical to the host
     encoder's — the stored format is backend-agnostic."""

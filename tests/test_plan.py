@@ -40,6 +40,97 @@ def test_resolve_config_explicit_passthrough():
     assert part.local_bits == cfg.local_bits
 
 
+# -- pipeline depth auto-tuning off measured calibration -----------------------
+
+def test_depth_model_fetch_dominant_picks_sequential():
+    """When the blocking d2h wait dominates the phase mix, coalescing
+    waves can't pay for its dispatch tax — the auto-tuner must fall back
+    to depth 1 instead of reproducing the old always-2 losing choice."""
+    from repro.core.planner import PipelineCalibration, predict_depth_speedup
+
+    fetch_dom = PipelineCalibration(t_load=0.1, t_compute=0.1,
+                                    t_fetch=1.0, t_store=0.1)
+    assert predict_depth_speedup(2, fetch_dom) < 1.0
+    qc = build_circuit("qft", 10)
+    cfg, _, _ = resolve_config(qc, EngineConfig(local_bits=5),
+                               calibration=fetch_dom)
+    assert cfg.pipeline_depth == 1
+    # budget-driven search honors the same model
+    cfg, _, _ = resolve_config(
+        qc, EngineConfig(memory_budget_bytes=64 * 2 ** 10),
+        calibration=fetch_dom)
+    assert cfg.pipeline_depth == 1
+
+
+def test_depth_model_compute_dominant_picks_overlap():
+    from repro.core.planner import PipelineCalibration, predict_depth_speedup
+
+    comp_dom = PipelineCalibration(t_load=0.1, t_compute=1.0,
+                                   t_fetch=0.1, t_store=0.1)
+    assert predict_depth_speedup(2, comp_dom) > 1.0
+    qc = build_circuit("qft", 10)
+    cfg, _, _ = resolve_config(qc, EngineConfig(local_bits=5),
+                               calibration=comp_dom)
+    assert cfg.pipeline_depth >= 2
+
+
+def test_depth_model_never_repeats_bench5_losing_choice():
+    """BENCH_5 recorded depth-2 at 0.58x of sequential.  A calibration
+    carrying that measured profile must drive every auto-tuned path to
+    depth 1 — the planner never again selects a depth whose (measured or
+    predicted) speedup is below 1."""
+    from repro.core.planner import PipelineCalibration, predict_depth_speedup
+
+    bench5 = PipelineCalibration(t_load=0.3, t_compute=0.5, t_fetch=0.2,
+                                 t_store=0.3,
+                                 measured=((2, 0.58), (4, 0.54), (8, 0.46)))
+    assert predict_depth_speedup(2, bench5) == pytest.approx(0.58)
+    qc = build_circuit("qft", 14)
+    for cfg_in in (EngineConfig(local_bits=7),
+                   EngineConfig(memory_budget_bytes=96 * 2 ** 10)):
+        cfg, _, _ = resolve_config(qc, cfg_in, calibration=bench5)
+        assert cfg.pipeline_depth == 1
+    # an explicit depth is the user's call — passed through untouched
+    cfg, _, _ = resolve_config(qc, EngineConfig(local_bits=7,
+                                                pipeline_depth=2),
+                               calibration=bench5)
+    assert cfg.pipeline_depth == 2
+
+
+def test_auto_depth_never_predicts_losing_speedup():
+    """Whatever depth the auto-tuner lands on, its own model must rate
+    that depth >= 1.0x — across a sweep of synthetic phase mixes."""
+    from repro.core.planner import PipelineCalibration, predict_depth_speedup
+
+    qc = build_circuit("qft", 10)
+    mixes = [(l, c, f, s)
+             for l in (0.1, 1.0) for c in (0.1, 1.0)
+             for f in (0.05, 1.0) for s in (0.1, 1.0)]
+    for l, c, f, s in mixes:
+        cal = PipelineCalibration(t_load=l, t_compute=c, t_fetch=f, t_store=s)
+        cfg, _, _ = resolve_config(qc, EngineConfig(local_bits=5),
+                                   calibration=cal)
+        assert predict_depth_speedup(cfg.pipeline_depth, cal) >= 1.0
+
+
+def test_sim_stats_expose_pipeline_calibration():
+    """A run yields the per-group-phase calibration the next plan's depth
+    model consumes, and the plan artifact records its predicted overlap."""
+    qc = build_circuit("qft", 10)
+    with Simulator(qc, EngineConfig(local_bits=5)) as sim:
+        plan = sim.compile()
+        assert plan.predicted.depth_speedup > 0
+        assert "overlap speedup" in plan.describe()
+        rt = ExecutionPlan.from_json(plan.to_json())
+        assert rt.predicted.depth_speedup == plan.predicted.depth_speedup
+        sim.run()
+        stats = sim.stats
+    assert stats.n_group_phases > 0
+    cal = stats.pipeline_calibration()
+    assert cal.t_load >= 0 and cal.t_compute >= 0
+    assert cal.t_fetch >= 0 and cal.t_store >= 0
+
+
 # -- budget guarantee (the acceptance criterion) -------------------------------
 
 @pytest.mark.parametrize("n,budget_kib", [(14, 96), (18, 2048)])
