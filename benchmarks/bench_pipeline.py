@@ -1,6 +1,6 @@
 """Fig. 12 + §4.3 boundary traffic + stage-compute comparison.
 
-Three sections:
+Four sections:
 
 1. pipeline depth sweep (Fig. 12) on qft-14.
 2. codec-backend comparison (host vs device-resident lossy codec): the
@@ -17,6 +17,9 @@ Three sections:
    group planes outgrow the caches and elided transposes are real
    memory passes; the tiny-group qft-14/b=7 layout is dispatch-bound
    and shows the floor, not the ceiling.
+4. resilience guardrail overhead: block checksums + pressure monitor on
+   vs off at qft-14 with a spill-forcing RAM budget; the within-run
+   ``guardrail_overhead`` ratio is gated absolutely by compare.py.
 """
 import time
 
@@ -197,6 +200,37 @@ def main():
     emit("pipeline", "transposes_scheduled", stats.n_transposes_scheduled)
     emit("pipeline", "transpose_reduction",
          stats.n_transposes_naive / max(1, stats.n_transposes_scheduled))
+
+    # resilience guardrails: block checksums + pressure monitor, on vs
+    # off, at the paper layout with a RAM budget small enough that the
+    # spill tier (where the checksums actually run) is exercised.
+    # Interleaved min-of-rounds like the depth sweep; the emitted
+    # guardrail_overhead ratio is within-run, so machine speed cancels
+    # and compare.py gates it against an absolute ceiling.
+    guard_cfgs = {
+        "on": EngineConfig(local_bits=7, ram_budget_bytes=2048),
+        "off": EngineConfig(local_bits=7, ram_budget_bytes=2048,
+                            integrity_checks=False,
+                            pressure_monitor=False),
+    }
+    sims = {}
+    try:
+        for k, c in guard_cfgs.items():
+            sims[k] = Simulator(qc, c).__enter__()
+            sims[k].run()              # warmup
+        best = {k: float("inf") for k in sims}
+        for _ in range(6):
+            for k, s in sims.items():
+                t0 = time.perf_counter()
+                s.run()
+                best[k] = min(best[k], time.perf_counter() - t0)
+        assert sims["on"].stats.n_spills > 0   # the guarded path ran
+    finally:
+        for s in sims.values():
+            s.__exit__(None, None, None)
+    emit("pipeline", "guard_on_s", best["on"])
+    emit("pipeline", "guard_off_s", best["off"])
+    emit("pipeline", "guardrail_overhead", best["on"] / best["off"])
 
     # stage-fn kernel time (the compute the pipeline dispatches), at the
     # paper layout, a compute-bound qft-14 layout, and a cache-exceeding

@@ -33,6 +33,12 @@ current speedup falls below ``baseline / --speedup-threshold`` (default
 regressing back to the pre-wave-coalescing era where depth 2 *lost* to
 sequential.
 
+``*_overhead`` rows (within-run on/off ratios, e.g. the resilience
+``guardrail_overhead`` of checksums + pressure monitoring) are gated
+against an absolute ``--overhead-ceiling`` from the CURRENT dump alone —
+no baseline needed, so a newly added guardrail must prove it is close to
+free on its first run.
+
 When ``$GITHUB_STEP_SUMMARY`` is set (GitHub Actions), the comparison
 table is appended there as markdown so the ``bench-trajectory`` job shows
 the per-row ratios without digging through artifacts.
@@ -50,6 +56,7 @@ DEFAULT_THRESHOLD = 3.0
 DEFAULT_MIN_BASELINE = 0.5
 DEFAULT_MAX_MEDIAN = 10.0
 DEFAULT_SPEEDUP_THRESHOLD = 1.5
+DEFAULT_OVERHEAD_CEILING = 1.15
 
 
 def _load_rows(path: str, suffix: str) -> dict[str, float]:
@@ -72,6 +79,25 @@ def load_timing_rows(path: str) -> dict[str, float]:
 def load_speedup_rows(path: str) -> dict[str, float]:
     """``bench/section/key -> ratio`` for every ``*_speedup`` metric row."""
     return _load_rows(path, "_speedup")
+
+
+def load_overhead_rows(path: str) -> dict[str, float]:
+    """``bench/section/key -> ratio`` for every ``*_overhead`` metric row."""
+    return _load_rows(path, "_overhead")
+
+
+def gate_overhead_rows(
+    current: dict[str, float],
+    ceiling: float,
+) -> list[tuple[str, float, bool]]:
+    """``*_overhead`` rows -> ``[(key, value, busted)]``.
+
+    Overheads are within-run on/off ratios (e.g. the pipeline bench's
+    resilience ``guardrail_overhead``): machine speed cancels, so they
+    are gated against an ABSOLUTE ceiling — no baseline needed, and a
+    row present only in the current dump is still gated (that is the
+    point: a new guardrail must prove it is close to free)."""
+    return [(key, val, val > ceiling) for key, val in sorted(current.items())]
 
 
 def compare_speedup_rows(
@@ -172,6 +198,24 @@ def render_speedup_markdown(
     return "\n".join(lines) + "\n"
 
 
+def render_overhead_markdown(
+    rows: list[tuple[str, float, bool]],
+    ceiling: float,
+) -> str:
+    if not rows:
+        return ""
+    lines = [
+        f"### Overhead-row gate (absolute ceiling {ceiling:g}x)",
+        "",
+        "| row | current | |",
+        "|---|---:|---|",
+    ]
+    for key, val, busted in rows:
+        flag = ":x:" if busted else ""
+        lines.append(f"| `{key}` | {val:.3f}x | {flag} |")
+    return "\n".join(lines) + "\n"
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("baseline", help="committed BENCH_*.json baseline")
@@ -205,6 +249,15 @@ def main(argv=None) -> int:
         "%(default)sx)",
     )
     ap.add_argument(
+        "--overhead-ceiling",
+        type=float,
+        default=DEFAULT_OVERHEAD_CEILING,
+        help="fail when any *_overhead row (within-run on/off ratio, "
+        "e.g. the resilience guardrail_overhead) exceeds this absolute "
+        "ceiling — gated from the current dump alone (default "
+        "%(default)sx)",
+    )
+    ap.add_argument(
         "--max-median",
         type=float,
         default=DEFAULT_MAX_MEDIAN,
@@ -229,11 +282,16 @@ def main(argv=None) -> int:
         load_speedup_rows(args.current),
         args.speedup_threshold,
     )
+    ov_rows = gate_overhead_rows(
+        load_overhead_rows(args.current), args.overhead_ceiling)
     table = render_markdown(rows, args.threshold, median)
     sp_table = render_speedup_markdown(sp_rows, args.speedup_threshold)
+    ov_table = render_overhead_markdown(ov_rows, args.overhead_ceiling)
     print(table)
     if sp_table:
         print(sp_table)
+    if ov_table:
+        print(ov_table)
 
     only_base = sorted(set(baseline) - set(current))
     only_new = sorted(set(current) - set(baseline))
@@ -250,6 +308,8 @@ def main(argv=None) -> int:
             fh.write(table + "\n")
             if sp_table:
                 fh.write(sp_table + "\n")
+            if ov_table:
+                fh.write(ov_table + "\n")
 
     if not args.absolute and rows and median > args.max_median:
         print(
@@ -262,7 +322,8 @@ def main(argv=None) -> int:
 
     regressions = [r for r in rows if r[4]]
     sp_regressions = [r for r in sp_rows if r[4]]
-    if regressions or sp_regressions:
+    ov_busts = [r for r in ov_rows if r[2]]
+    if regressions or sp_regressions or ov_busts:
         for key, old, new, ratio, _ in regressions:
             print(
                 f"REGRESSION {key}: {old:.3f}s -> {new:.3f}s "
@@ -275,9 +336,16 @@ def main(argv=None) -> int:
                 f"(dropped {drop:.2f}x > {args.speedup_threshold:g}x)",
                 file=sys.stderr,
             )
+        for key, val, _ in ov_busts:
+            print(
+                f"REGRESSION {key}: overhead {val:.3f}x exceeds the "
+                f"{args.overhead_ceiling:g}x ceiling",
+                file=sys.stderr,
+            )
         return 1
     print(f"# OK: {len(rows)} shared timing rows within {args.threshold:g}x, "
-          f"{len(sp_rows)} speedup rows held")
+          f"{len(sp_rows)} speedup rows held, "
+          f"{len(ov_rows)} overhead rows under {args.overhead_ceiling:g}x")
     return 0
 
 

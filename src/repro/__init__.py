@@ -22,6 +22,11 @@ Public API (the stable surface; everything else is internal layering):
     Metrics      fidelity, max_pointwise_rel_error
     Compression  PwRelParams, compress_complex_block,
                  decompress_complex_block, BlockSegments, BlockStore
+    Resilience   inject_faults / FaultSpec (deterministic fault
+                 injection), typed failures (StoreIOError,
+                 BlockCorruptionError, ResumableError,
+                 MemoryPressureError), PressureMonitor (degradation
+                 ladder when compression underdelivers)
 
 Quickstart — a session that never materializes the 2^n state::
 
@@ -43,11 +48,17 @@ from .compression import (  # noqa: F401
     compress_complex_block, decompress_complex_block,
 )
 from .core import (  # noqa: F401
-    BatchResult, BMQSimEngine, Circuit, EngineConfig, ExecutionPlan, Gate,
-    Parameter, PlanPredictions, SimResult, SimStats, Simulator, StagePlan,
-    build_circuit, fidelity, max_pointwise_rel_error, maxcut_cost_fn,
-    maxcut_edges, qaoa_template, random_circuit, simulate_bmqsim,
-    simulate_dense, with_depolarizing, zsum_cost_fn,
+    BatchResult, BMQSimEngine, Circuit, EngineConfig, ExecutionPlan,
+    FaultInjector, FaultSpec, Gate, InjectedCrash, Parameter,
+    PlanPredictions, PressureMonitor, SimResult, SimStats, Simulator,
+    StagePlan, build_circuit, fidelity, inject_faults,
+    max_pointwise_rel_error, maxcut_cost_fn, maxcut_edges, qaoa_template,
+    random_circuit, simulate_bmqsim, simulate_dense, with_depolarizing,
+    zsum_cost_fn,
+)
+from .errors import (  # noqa: F401
+    BlockCorruptionError, CheckpointError, MemoryPressureError,
+    ResumableError, StoreIOError,
 )
 
 __all__ = [
@@ -67,6 +78,10 @@ __all__ = [
     # compression
     "PwRelParams", "CompressedBlock", "compress_complex_block",
     "decompress_complex_block", "BlockSegments", "BlockStore",
+    # resilience
+    "FaultSpec", "FaultInjector", "InjectedCrash", "inject_faults",
+    "PressureMonitor", "StoreIOError", "BlockCorruptionError",
+    "CheckpointError", "ResumableError", "MemoryPressureError",
 ]
 
 __version__ = "0.4.0"

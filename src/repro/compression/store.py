@@ -19,6 +19,32 @@ Extras matching the paper:
 
 Keys map to refcounted internal blobs, so overwriting a key never disturbs
 other keys aliased to the same blob.
+
+Resilience (the paper's "dedicated error control" / stable-execution
+claim, §4.4):
+
+* **Integrity** — every blob that takes serialized form gets a crc32
+  content checksum: opaque ``bytes`` at ``put`` time, structured blocks
+  when they serialize to spill.  Every disk-tier read and every snapshot
+  restore verifies it; a mismatch raises
+  :class:`~repro.errors.BlockCorruptionError` — corrupted data is
+  *detected*, never silently decoded.  (RAM-resident structured blocks
+  are never serialized, so the hot path pays nothing.)
+* **Transient-fault tolerance** — spill and snapshot I/O retries with
+  exponential backoff (``io_retries`` / ``io_backoff_s``); exhausted
+  retries raise a typed :class:`~repro.errors.StoreIOError` naming the
+  operation, key/blob and path instead of leaking a raw ``OSError`` out
+  of a worker thread.
+* **Durable snapshots** — :meth:`snapshot` fsyncs the temp file (and its
+  parent directory) before the atomic rename, stamps per-blob digests in
+  the header, and :meth:`restore` validates the total file length against
+  ``blob_sizes`` so a truncated/torn checkpoint raises a clear
+  :class:`~repro.errors.CheckpointError` instead of failing deep in
+  decode.
+* **Pressure relief** — :meth:`spill` proactively moves RAM-tier blobs
+  to disk (the degradation ladder's third rung), and
+  :meth:`load_snapshot` reloads a snapshot *into* an existing store
+  in place (the engine's replay-from-checkpoint path).
 """
 from __future__ import annotations
 
@@ -28,8 +54,12 @@ import os
 import struct
 import tempfile
 import threading
+import time
+import zlib
 from dataclasses import dataclass
 
+from ..errors import BlockCorruptionError, CheckpointError, StoreIOError
+from ..faults import fault_point
 from .segments import BlockSegments
 
 _SNAP_MAGIC = b"BMQSNAP1"
@@ -46,6 +76,12 @@ class StoreStats:
     n_disk_reads: int = 0
     puts: int = 0
     gets: int = 0
+    #: transient I/O errors absorbed by retry-with-backoff
+    n_io_retries: int = 0
+    #: blobs moved RAM -> disk by an explicit spill() call (pressure rung)
+    n_proactive_spills: int = 0
+    #: checksum mismatches detected (each raised a BlockCorruptionError)
+    n_corruptions_detected: int = 0
 
     def observe(self) -> None:
         self.peak_ram_bytes = max(self.peak_ram_bytes, self.ram_bytes)
@@ -68,15 +104,30 @@ class BlockStore:
     :class:`BlockSegments` (``put_block`` / ``get_block``); the two views
     are interchangeable — a spilled structured block deserializes on read,
     and ``get_block`` on a byte blob parses the self-describing layout.
+
+    Args:
+        ram_budget_bytes: primary-tier byte budget (None = unbounded).
+        spill_dir: secondary-tier directory (default: a temp dir).
+        checksums: stamp/verify crc32 content checksums on serialized
+            blobs (disk tier + snapshots).  Default on; the guardrail
+            overhead is benchmarked in ``bench_pipeline``.
+        io_retries: bounded retries of a failed spill/snapshot I/O op.
+        io_backoff_s: initial backoff between retries (doubles per try).
     """
 
     def __init__(self, ram_budget_bytes: int | None = None,
-                 spill_dir: str | None = None):
+                 spill_dir: str | None = None, *,
+                 checksums: bool = True, io_retries: int = 3,
+                 io_backoff_s: float = 0.01):
         self.ram_budget = ram_budget_bytes
+        self.checksums = checksums
+        self.io_retries = io_retries
+        self.io_backoff_s = io_backoff_s
         self._key2blob: dict[int, int] = {}
         self._refs: dict[int, int] = {}        # blob id -> refcount
         self._ram: dict[int, bytes] = {}       # blob id -> bytes
         self._disk: dict[int, str] = {}        # blob id -> path
+        self._crc: dict[int, int] = {}         # blob id -> crc32 of bytes
         self._ids = itertools.count()
         self._spill_dir = spill_dir
         self._tmp: tempfile.TemporaryDirectory | None = None
@@ -96,14 +147,88 @@ class BlockStore:
             return True
         return self.stats.ram_bytes + nbytes <= self.ram_budget
 
+    def _with_retries(self, op, opname: str, *, key=None, bid=None,
+                      path=None, fnf_is_signal: bool = False):
+        """Run ``op`` with bounded exponential-backoff retries on
+        ``OSError``; exhausted retries raise a typed
+        :class:`StoreIOError` naming the operation and blob.
+
+        ``fnf_is_signal`` passes ``FileNotFoundError`` through untouched
+        — on the read path it means the key was rebound mid-read (a
+        normal race the caller resolves under the lock), not a fault.
+        """
+        delay = self.io_backoff_s
+        last: OSError | None = None
+        for attempt in range(self.io_retries + 1):
+            try:
+                return op()
+            except FileNotFoundError:
+                if fnf_is_signal:
+                    raise
+                raise StoreIOError(opname, key=key, blob_id=bid, path=path,
+                                   retries=attempt) from None
+            except StoreIOError:
+                raise
+            except OSError as e:
+                last = e
+                if attempt < self.io_retries:
+                    with self._lock:
+                        self.stats.n_io_retries += 1
+                    time.sleep(delay)
+                    delay *= 2
+        raise StoreIOError(opname, key=key, blob_id=bid, path=path,
+                           retries=self.io_retries) from last
+
+    def _write_spill(self, path: str, data: bytes, *, key=None,
+                     bid=None) -> None:
+        """One spill-tier file write: fault-injectable, retried, typed."""
+        def op():
+            payload = fault_point("store.spill_write", data)
+            with open(path, "wb") as f:
+                f.write(payload)
+        self._with_retries(op, "spill write", key=key, bid=bid, path=path)
+
+    def _read_spill(self, path: str, *, key=None, bid=None) -> bytes:
+        """One spill-tier file read: fault-injectable, retried, verified."""
+        def op():
+            with open(path, "rb") as f:
+                raw = f.read()
+            return fault_point("store.spill_read", raw)
+        data = self._with_retries(op, "spill read", key=key, bid=bid,
+                                  path=path, fnf_is_signal=True)
+        self._verify(data, bid, key=key, path=path, where="spill read")
+        return data
+
+    def _verify(self, data: bytes, bid, *, key=None, path=None,
+                where: str) -> None:
+        if not self.checksums or bid is None:
+            return
+        expected = self._crc.get(bid)
+        if expected is None:
+            return
+        actual = zlib.crc32(data)
+        if actual != expected:
+            with self._lock:
+                self.stats.n_corruptions_detected += 1
+            raise BlockCorruptionError(where, key=key, blob_id=bid,
+                                       path=path, expected_crc=expected,
+                                       actual_crc=actual)
+
     def _put(self, key: int, blob) -> None:
         """Bind ``key`` to a fresh blob; disk writes happen outside the
         lock (the new blob id is invisible to readers until ``_bind``)."""
         nbytes = _blob_nbytes(blob)
+        # opaque bytes are checksummed at put time; structured blocks
+        # only when they serialize (spill/snapshot) — the RAM tier keeps
+        # the object, so there is nothing byte-stable to stamp yet
+        crc = (zlib.crc32(blob) if self.checksums
+               and isinstance(blob, (bytes, bytearray)) else None)
         with self._lock:
             self.stats.puts += 1
             bid = next(self._ids)
             self._refs[bid] = 0
+            if crc is not None:
+                self._crc[bid] = crc
             if self._fits_ram(nbytes):
                 self._ram[bid] = blob
                 self.stats.ram_bytes += nbytes
@@ -111,9 +236,13 @@ class BlockStore:
                 self._bind(key, bid)
                 return
             path = self._spill_path(bid)
-        with open(path, "wb") as f:
-            f.write(_blob_bytes(blob))
+        data = _blob_bytes(blob)
+        if self.checksums and crc is None:
+            crc = zlib.crc32(data)
+        self._write_spill(path, data, key=key, bid=bid)
         with self._lock:
+            if crc is not None:
+                self._crc[bid] = crc
             self._disk[bid] = path
             self.stats.disk_bytes += nbytes
             self.stats.n_spills += 1
@@ -125,6 +254,7 @@ class BlockStore:
         if self._refs[bid] > 0:
             return
         del self._refs[bid]
+        self._crc.pop(bid, None)
         if bid in self._ram:
             self.stats.ram_bytes -= _blob_nbytes(self._ram.pop(bid))
         else:
@@ -168,8 +298,7 @@ class BlockStore:
             path = self._disk[bid]
         try:
             # disk read outside the lock so concurrent workers overlap I/O
-            with open(path, "rb") as f:
-                return f.read()
+            return self._read_spill(path, key=key, bid=bid)
         except FileNotFoundError:
             # the key was rebound and its old blob released mid-read —
             # retry under the lock for a consistent snapshot
@@ -178,8 +307,15 @@ class BlockStore:
                 blob = self._ram.get(bid)
                 if blob is not None:
                     return blob
-                with open(self._disk[bid], "rb") as f:
-                    return f.read()
+                path = self._disk[bid]
+                try:
+                    return self._read_spill(path, key=key, bid=bid)
+                except FileNotFoundError as e:
+                    # still bound to this blob and still missing: the
+                    # file is genuinely gone, not a rebind race
+                    raise StoreIOError("spill read", key=key, blob_id=bid,
+                                       path=path,
+                                       detail="blob file missing") from e
 
     def get(self, key: int) -> bytes:
         """Fetch ``key`` as flat bytes (serializing a structured block)."""
@@ -215,14 +351,56 @@ class BlockStore:
     def keys(self):
         return sorted(self._key2blob)
 
+    # -- pressure relief -------------------------------------------------------
+    def spill(self, target_ram_bytes: int) -> int:
+        """Proactively move RAM-tier blobs to disk (largest first) until
+        ``ram_bytes <= target_ram_bytes``; returns blobs moved.
+
+        The degradation ladder's third rung
+        (:class:`~repro.core.pressure.PressureMonitor`): called between
+        stages, when no pipeline workers are mid-flight, so the move
+        happens under the lock without racing readers.
+        """
+        moved = 0
+        with self._lock:
+            if self.stats.ram_bytes <= target_ram_bytes:
+                return 0
+            order = sorted(self._ram.items(),
+                           key=lambda kv: -_blob_nbytes(kv[1]))
+            for bid, blob in order:
+                if self.stats.ram_bytes <= target_ram_bytes:
+                    break
+                data = _blob_bytes(blob)
+                path = self._spill_path(bid)
+                self._write_spill(path, data, bid=bid)
+                if self.checksums:
+                    self._crc[bid] = zlib.crc32(data)
+                nbytes = _blob_nbytes(blob)
+                del self._ram[bid]
+                self._disk[bid] = path
+                self.stats.ram_bytes -= nbytes
+                self.stats.disk_bytes += len(data)
+                self.stats.n_spills += 1
+                self.stats.n_proactive_spills += 1
+                moved += 1
+            self.stats.observe()
+        return moved
+
     # -- checkpointing ---------------------------------------------------------
     def snapshot(self, path: str, meta: dict | None = None) -> None:
-        """Serialize every key to one checkpoint file (atomic via rename).
+        """Serialize every key to one checkpoint file (atomic + durable).
 
         Alias structure is preserved: keys sharing a blob (the §4.2
         zero-block trick) serialize the blob once and restore shared.
         ``meta`` is an opaque caller dict (the engine's layout/codec
         manifest) stored alongside and handed back by :meth:`restore`.
+
+        Durability: the temp file is flushed + fsynced, atomically
+        renamed over ``path``, and the parent directory fsynced — a
+        crash mid-checkpoint leaves either the old complete file or the
+        new complete file, never a torn one.  The header carries
+        per-blob crc32 digests (``blob_crc``) that :meth:`restore`
+        verifies.
         """
         with self._lock:
             key2blob = dict(self._key2blob)
@@ -243,21 +421,92 @@ class BlockStore:
             if blob is not None:
                 blobs.append(_blob_bytes(blob))
             else:
-                with open(disk_path, "rb") as f:
-                    blobs.append(f.read())
+                blobs.append(self._read_spill(disk_path, bid=bid))
         header = json.dumps({
             "meta": meta or {},
             "keys": keys,
             "blob_sizes": [len(b) for b in blobs],
+            "blob_crc": [zlib.crc32(b) for b in blobs],
         }).encode()
         tmp = path + ".tmp"
-        with open(tmp, "wb") as f:
-            f.write(_SNAP_MAGIC)
-            f.write(_SNAP_HEAD.pack(len(header)))
-            f.write(header)
-            for b in blobs:
-                f.write(b)
-        os.replace(tmp, path)
+
+        def op():
+            fault_point("checkpoint.write")
+            with open(tmp, "wb") as f:
+                f.write(_SNAP_MAGIC)
+                f.write(_SNAP_HEAD.pack(len(header)))
+                f.write(header)
+                for b in blobs:
+                    f.write(b)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+            # fsync the parent directory so the rename itself is durable
+            dfd = os.open(os.path.dirname(os.path.abspath(path)),
+                          os.O_RDONLY)
+            try:
+                os.fsync(dfd)
+            finally:
+                os.close(dfd)
+        try:
+            self._with_retries(op, "snapshot", path=path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    @staticmethod
+    def _read_snapshot(path: str) -> tuple[dict, list[bytes]]:
+        """Parse + validate a snapshot file -> (header, blobs).
+
+        Structural validation happens BEFORE any blob is decoded: bad
+        magic or a file length inconsistent with ``blob_sizes`` raises
+        :class:`CheckpointError`; a per-blob digest mismatch raises
+        :class:`BlockCorruptionError` naming the blob index.
+        """
+        file_len = os.path.getsize(path)
+        with open(path, "rb") as f:
+            magic = f.read(len(_SNAP_MAGIC))
+            if magic != _SNAP_MAGIC:
+                raise CheckpointError(f"{path}: not a BMQSIM checkpoint "
+                                      f"(bad magic {magic!r})")
+            (hlen,) = _SNAP_HEAD.unpack(f.read(_SNAP_HEAD.size))
+            head_raw = f.read(hlen)
+            if len(head_raw) < hlen:
+                raise CheckpointError(
+                    f"{path}: truncated checkpoint (header cut short: "
+                    f"{len(head_raw)}/{hlen} bytes)")
+            try:
+                header = json.loads(head_raw.decode())
+            except (UnicodeDecodeError, json.JSONDecodeError) as e:
+                raise CheckpointError(
+                    f"{path}: corrupt checkpoint header ({e})") from e
+            sizes = header["blob_sizes"]
+            expected_len = (len(_SNAP_MAGIC) + _SNAP_HEAD.size + hlen
+                            + sum(sizes))
+            if file_len != expected_len:
+                raise CheckpointError(
+                    f"{path}: truncated/torn checkpoint — file is "
+                    f"{file_len} bytes but header promises {expected_len} "
+                    f"({len(sizes)} blobs totaling {sum(sizes)} bytes)")
+            blobs = [f.read(sz) for sz in sizes]
+        for i, (blob, sz) in enumerate(zip(blobs, sizes)):
+            if len(blob) != sz:
+                raise CheckpointError(
+                    f"{path}: truncated checkpoint (blob {i}: "
+                    f"{len(blob)}/{sz} bytes)")
+        crcs = header.get("blob_crc")
+        if crcs is not None:      # pre-resilience snapshots lack digests
+            for i, (blob, crc) in enumerate(zip(blobs, crcs)):
+                actual = zlib.crc32(blob)
+                if actual != crc:
+                    raise BlockCorruptionError(
+                        f"snapshot restore ({path}, blob {i})",
+                        blob_id=i, path=path, expected_crc=crc,
+                        actual_crc=actual)
+        return header, blobs
 
     @classmethod
     def restore(cls, path: str, ram_budget_bytes: int | None = None,
@@ -267,25 +516,38 @@ class BlockStore:
         Blobs land in the RAM tier as serialized bytes (``get_block``
         re-parses structured blocks lazily); the usual budget/spill rules
         apply, so a snapshot larger than ``ram_budget_bytes`` restores
-        with overflow on the disk tier.
+        with overflow on the disk tier.  Every blob's stored digest is
+        verified first.
         """
-        with open(path, "rb") as f:
-            magic = f.read(len(_SNAP_MAGIC))
-            if magic != _SNAP_MAGIC:
-                raise ValueError(f"{path}: not a BMQSIM checkpoint "
-                                 f"(bad magic {magic!r})")
-            (hlen,) = _SNAP_HEAD.unpack(f.read(_SNAP_HEAD.size))
-            header = json.loads(f.read(hlen).decode())
-            blobs = [f.read(sz) for sz in header["blob_sizes"]]
+        header, blobs = cls._read_snapshot(path)
         store = cls(ram_budget_bytes=ram_budget_bytes, spill_dir=spill_dir)
+        store._load_keys(header, blobs)
+        return store, header["meta"]
+
+    def load_snapshot(self, path: str) -> dict:
+        """Reload a snapshot *into this store*, replacing every current
+        key -> the snapshot's meta dict.
+
+        The engine's replay-from-checkpoint path: on a detected
+        corruption mid-run, the simulator rewinds the live store to the
+        last checkpoint without rebuilding the session (backend/engine
+        references to this store stay valid).
+        """
+        header, blobs = self._read_snapshot(path)
+        with self._lock:
+            for key in list(self._key2blob):
+                self.delete(key)
+            self._load_keys(header, blobs)
+        return header["meta"]
+
+    def _load_keys(self, header: dict, blobs: list[bytes]) -> None:
         first_key: dict[int, int] = {}
         for key, blob_idx in header["keys"]:
             if blob_idx in first_key:
-                store.put_alias(key, first_key[blob_idx])
+                self.put_alias(key, first_key[blob_idx])
             else:
-                store.put(key, blobs[blob_idx])
+                self.put(key, blobs[blob_idx])
                 first_key[blob_idx] = key
-        return store, header["meta"]
 
     def close(self) -> None:
         if self._tmp is not None:

@@ -4,6 +4,9 @@ from .dense_engine import (  # noqa: F401
     apply_matrix, initial_state, simulate_dense, simulate_dense_sharded,
 )
 from .engine import BMQSimEngine, EngineConfig, SimStats, simulate_bmqsim  # noqa: F401
+from .faults import (  # noqa: F401
+    INJECTION_POINTS, FaultInjector, FaultSpec, InjectedCrash, inject_faults,
+)
 from .fidelity import fidelity, max_pointwise_rel_error, norm  # noqa: F401
 from .fusion import FusedGate, fuse_gates, gates_to_unitary  # noqa: F401
 from .groups import GroupLayout, expand_bits  # noqa: F401
@@ -13,6 +16,7 @@ from .library import (  # noqa: F401
 )
 from .partition import Partition, Stage, partition_circuit  # noqa: F401
 from .plan import ExecutionPlan, PlanPredictions, StagePlan  # noqa: F401
+from .pressure import RUNGS, PressureMonitor  # noqa: F401
 from .planner import (PipelineCalibration, estimate_bytes_per_amp,  # noqa: F401
                       predict_depth_speedup, resolve_config)
 from .pipeline import (  # noqa: F401

@@ -49,6 +49,7 @@ from .pipeline import (StagePipeline, complex_to_planes, make_backend,
 from .plan import ExecutionPlan, circuit_fingerprint, plan_fingerprint
 from .planner import (assemble_plan, estimate_bytes_per_amp, fuse_stage,
                       fuse_stage_lanes, max_feasible_lanes, resolve_config)
+from .pressure import PressureMonitor
 from .result import collect_statevector
 from .schedule import (StageSchedule, compile_schedule, execute_schedule,
                        execute_schedule_batched)
@@ -114,6 +115,28 @@ class EngineConfig:
             ``local_bits``/``pipeline_depth``.  Runtime batches larger
             than the budget allows are chunked into feasible sub-batches
             (see :meth:`BMQSimEngine.feasible_lanes`).
+        integrity_checks: stamp/verify crc32 content checksums on every
+            serialized blob (disk spill tier + checkpoint snapshots); a
+            mismatch raises a typed
+            :class:`~repro.errors.BlockCorruptionError` instead of
+            silently decoding corrupt data.  Default on (overhead is a
+            gated ``bench_pipeline`` row).
+        io_retries / io_backoff_s: bounded exponential-backoff retry of
+            transient spill/checkpoint I/O errors before the store gives
+            up with a typed :class:`~repro.errors.StoreIOError`.
+        pressure_monitor: check measured ``bytes_per_amp`` against the
+            planner's prediction at every stage boundary and walk the
+            degradation ladder (shrink in-flight window -> wave depth 1
+            -> proactive spill -> typed abort) when compression
+            underdelivers; see :mod:`repro.core.pressure`.
+        pressure_headroom: measured/predicted ratio that counts as
+            pressure (the entropy model is deliberately loose).
+        disk_budget_bytes: optional byte budget of the disk spill tier;
+            overflowing it is the ladder's terminal rung — a
+            :class:`~repro.errors.MemoryPressureError` abort at the next
+            stage boundary (resumable when checkpointing is active).
+            ``None`` (default) never aborts: incompressible-but-
+            spillable runs degrade and complete.
     """
 
     local_bits: int | None = None
@@ -132,6 +155,12 @@ class EngineConfig:
     devices: list | None = None
     per_gate: bool = False
     batch: int = 1
+    integrity_checks: bool = True
+    io_retries: int = 3
+    io_backoff_s: float = 0.01
+    pressure_monitor: bool = True
+    pressure_headroom: float = 1.5
+    disk_budget_bytes: int | None = None
 
 
 @dataclass
@@ -198,6 +227,21 @@ class SimStats:
     #: group x stage phase executions behind the t_* pipeline timings —
     #: the denominator for the planner's per-group calibration
     n_group_phases: int = 0
+    # -- resilience counters (see repro.core.pressure / repro.errors) -----
+    #: transient spill/checkpoint I/O errors absorbed by retry-with-backoff
+    n_io_retries: int = 0
+    #: blobs moved RAM -> disk by the pressure ladder's spill rung
+    n_proactive_spills: int = 0
+    #: checksum mismatches detected (every one raised a typed error)
+    n_corruptions_detected: int = 0
+    #: automatic replays-from-checkpoint after a detected corruption
+    n_replays: int = 0
+    #: emergency checkpoints flushed at a pressure abort
+    n_emergency_checkpoints: int = 0
+    #: degradation-ladder escalations across the session
+    n_pressure_events: int = 0
+    #: "stage{k}:{rung}" per escalation, in firing order
+    pressure_rungs: list = field(default_factory=list)
 
     @property
     def standard_bytes(self) -> int:
@@ -442,7 +486,10 @@ class BMQSimEngine:
         self.params = PwRelParams(b_r=config.b_r)
         self.store = store if store is not None else BlockStore(
             ram_budget_bytes=config.ram_budget_bytes,
-            spill_dir=config.spill_dir)
+            spill_dir=config.spill_dir,
+            checksums=config.integrity_checks,
+            io_retries=config.io_retries,
+            io_backoff_s=config.io_backoff_s)
         self.stats = SimStats(n_qubits=self.n, n_gates=len(circuit))
         self.backend = make_backend(
             config.codec_backend, self.store, self.params, 2 ** self.b,
@@ -700,6 +747,18 @@ class BMQSimEngine:
                                      base_key if blk == 0 else base_key + 1)
         self.stats.n_block_compressions += min(n_blocks, 2)
 
+    def _make_monitor(self, lanes: int = 1) -> PressureMonitor | None:
+        """Arm the degradation ladder for one run (None when disabled)."""
+        if not self.cfg.pressure_monitor:
+            return None
+        return PressureMonitor(
+            predicted_bpa=estimate_bytes_per_amp(self.cfg.b_r,
+                                                 self.cfg.compression),
+            n_qubits=self.n, lanes=lanes,
+            headroom=self.cfg.pressure_headroom,
+            ram_budget=self.cfg.ram_budget_bytes,
+            disk_budget=self.cfg.disk_budget_bytes)
+
     def _clear_lanes(self, new_lanes: int) -> None:
         """Drop the final states of lanes a previous (larger) batch left
         in the store — their keys would otherwise leak RAM forever."""
@@ -744,6 +803,7 @@ class BMQSimEngine:
             self._init_state()
         pipe = StagePipeline(self.backend, depth=self.cfg.pipeline_depth,
                              devices=self._devices)
+        monitor = self._make_monitor()
         # snapshot the backend's lifetime counters so repeated run() calls
         # on one engine accumulate deltas, not running totals
         back = self.backend
@@ -784,6 +844,10 @@ class BMQSimEngine:
                         self.store.total_bytes / 2 ** self.n
                 if on_stage_done is not None:
                     on_stage_done(idx)
+                if monitor is not None:
+                    # after on_stage_done: a periodic checkpoint for this
+                    # stage lands on disk before an abort can reference it
+                    monitor.check(self.store, pipe, self.stats, idx + 1)
         self.stats.t_decompress += pipe.t_load
         self.stats.t_compute += pipe.t_compute
         self.stats.t_fetch += pipe.t_fetch
@@ -852,17 +916,23 @@ class BMQSimEngine:
         # sub-batches (inflating peak RAM and the first-chunk calibration)
         self._clear_lanes(0)
         self._stored_lanes = lanes
+        monitor = self._make_monitor(lanes)
         for base in range(0, lanes, chunk):
-            self._run_lane_chunk(bindings[base:base + chunk], base)
+            self._run_lane_chunk(bindings[base:base + chunk], base, monitor)
         self.stats.t_total += time.perf_counter() - t_start
         self._snap_store_stats()
 
-    def _run_lane_chunk(self, bindings: tuple, lane_base: int) -> None:
+    def _run_lane_chunk(self, bindings: tuple, lane_base: int,
+                        monitor: PressureMonitor | None = None) -> None:
         """One feasible sub-batch: bind, init its lanes, walk the plan
         with lane-batched pipeline stages."""
         bound = self._bind_stages_batch(bindings)
         lanes = len(bindings)
         self._init_lanes(lane_base, lanes)
+        if monitor is not None:
+            # bpa denominator: lanes materialized so far (finished
+            # chunks' final states stay resident in the store)
+            monitor.lanes = lane_base + lanes
         offsets = (lane_base + np.arange(lanes, dtype=np.int64)) \
             * self.n_blocks
         pipe = StagePipeline(self.backend, depth=self.cfg.pipeline_depth,
@@ -872,7 +942,7 @@ class BMQSimEngine:
         dec0, com0 = back.n_decompressions, back.n_compressions
         first_done = False
         with pipe:
-            for bs in bound:
+            for stage_no, bs in enumerate(bound):
                 if not bs.plan:
                     continue
                 if bs.key in self._seen_stagefns:
@@ -898,6 +968,9 @@ class BMQSimEngine:
                     first_done = True
                     self.stats.bytes_per_amp_measured = \
                         self.store.total_bytes / (2 ** self.n * lanes)
+                if monitor is not None:
+                    monitor.check(self.store, pipe, self.stats,
+                                  stage_no + 1)
         self.stats.t_decompress += pipe.t_load
         self.stats.t_compute += pipe.t_compute
         self.stats.t_fetch += pipe.t_fetch
@@ -914,6 +987,9 @@ class BMQSimEngine:
         self.stats.peak_total_bytes = s.peak_total_bytes
         self.stats.disk_bytes = s.disk_bytes
         self.stats.n_spills = s.n_spills
+        self.stats.n_io_retries = s.n_io_retries
+        self.stats.n_proactive_spills = s.n_proactive_spills
+        self.stats.n_corruptions_detected = s.n_corruptions_detected
 
     def _collect(self) -> np.ndarray:
         return collect_statevector(self.backend, self.n, self.b)

@@ -1,0 +1,35 @@
+"""Canonical import surface of the fault-injection framework.
+
+The implementation lives in :mod:`repro.faults` (top-level and
+stdlib-only, so the compression layer's store can register injection
+points without importing ``repro.core`` — which imports the store right
+back).  Import from here::
+
+    from repro.core.faults import FaultSpec, inject_faults
+
+See the :mod:`repro.faults` module docs for the point registry, fault
+kinds and spec syntax.
+"""
+from ..faults import (  # noqa: F401
+    INJECTION_POINTS,
+    FaultInjector,
+    FaultSpec,
+    InjectedCrash,
+    active_injector,
+    clear_faults,
+    fault_point,
+    inject_faults,
+    install_faults,
+)
+
+__all__ = [
+    "INJECTION_POINTS",
+    "FaultInjector",
+    "FaultSpec",
+    "InjectedCrash",
+    "active_injector",
+    "clear_faults",
+    "fault_point",
+    "inject_faults",
+    "install_faults",
+]

@@ -75,6 +75,8 @@ from ..compression.device_codec import (decode_blocks_planes,
                                         wire_to_segments)
 from ..compression.pwrel import PwRelParams
 from ..compression.store import BlockStore
+from ..errors import BlockCorruptionError, StoreIOError
+from .faults import fault_point
 
 __all__ = ["CodecBackend", "HostCodecBackend", "DeviceCodecBackend",
            "StagePipeline", "make_backend",
@@ -178,6 +180,7 @@ class CodecBackend:
     # -- host block codec (also used for init/collect outside the pipeline) --
     def encode_host_block(self, key: int, amps: np.ndarray) -> None:
         """Compress one np block on the host and store it under ``key``."""
+        fault_point("codec.encode")
         if not self.compression:
             self.store.put(key, np.asarray(amps, np.complex64).tobytes())
         else:
@@ -187,6 +190,7 @@ class CodecBackend:
 
     def decode_host_block(self, key: int) -> np.ndarray:
         """Fetch the block under ``key`` and decompress it on the host."""
+        fault_point("codec.decode")
         if not self.compression:
             return np.frombuffer(self.store.get(key), dtype=np.complex64)
         return decode_block_host(self.store.get_block(key), self.params)
@@ -349,6 +353,7 @@ class DeviceCodecBackend(CodecBackend):
     def fetch_group(self, block_ids):
         staged = []
         for bid in block_ids:
+            fault_point("codec.decode")
             seg = self.store.get_block(int(bid))
             if seg.is_raw:
                 staged.append(("raw", np.frombuffer(
@@ -393,6 +398,7 @@ class DeviceCodecBackend(CodecBackend):
 
     def store_group(self, block_ids, result):
         for pair, bid in zip(result, block_ids):
+            fault_point("codec.encode")
             self.store.put_block(
                 int(bid), wire_to_segments(pair, self.bsz,
                                            prescan=self.prescan,
@@ -517,6 +523,10 @@ class StagePipeline:
         # scheduler regardless of core count (the overlap tests use
         # this); an explicit 0 forces the coalescing-only wave loop.
         self.fetch_workers = fetch_workers
+        #: in-flight result window (double buffer).  An instance attr —
+        #: not the module constant — so the pressure ladder can shrink it
+        #: to 1 between stages (rung 1) without rebuilding the pools.
+        self.inflight_window = _INFLIGHT_WINDOW
         self.t_load = 0.0
         self.t_compute = 0.0     # h2d staging + kernel dispatch (non-blocking)
         self.t_fetch = 0.0       # blocking result wait at the d2h boundary
@@ -554,9 +564,26 @@ class StagePipeline:
         self._entered = False
 
     # -- timed phase wrappers (run inside worker threads) ---------------------
+    @staticmethod
+    def _key_span(keys) -> str:
+        flat = np.asarray(keys).reshape(-1)
+        if flat.size == 0:
+            return "no keys"
+        return (f"keys [{int(flat.min())}..{int(flat.max())}] "
+                f"({flat.size} blocks)")
+
     def _load(self, fetch, keys):
         t0 = time.perf_counter()
-        staged = fetch(keys)
+        try:
+            fault_point("pipeline.fetch")
+            staged = fetch(keys)
+        except (StoreIOError, BlockCorruptionError):
+            raise                   # already typed with key/blob context
+        except OSError as e:
+            # a raw OSError escaping a fetch worker carries no context —
+            # name the wave so the failure is attributable
+            raise StoreIOError("pipeline fetch",
+                               detail=self._key_span(keys)) from e
         dt = time.perf_counter() - t0
         with self._t_lock:
             self.t_load += dt
@@ -564,7 +591,14 @@ class StagePipeline:
 
     def _store(self, store, keys, result):
         t0 = time.perf_counter()
-        store(keys, result)
+        try:
+            fault_point("pipeline.store")
+            store(keys, result)
+        except (StoreIOError, BlockCorruptionError):
+            raise
+        except OSError as e:
+            raise StoreIOError("pipeline store",
+                               detail=self._key_span(keys)) from e
         dt = time.perf_counter() - t0
         with self._t_lock:
             self.t_store += dt
@@ -695,7 +729,7 @@ class StagePipeline:
                 self.t_compute += time.perf_counter() - t0
                 submit_next()          # keep the fetch lookahead full
                 in_flight.append((w, ticket))
-                if len(in_flight) >= _INFLIGHT_WINDOW:
+                if len(in_flight) >= self.inflight_window:
                     # double buffer: wave w is computing asynchronously
                     # while this (older) wave's blocking wait drains
                     ow, oticket = in_flight.popleft()

@@ -31,10 +31,14 @@ honor.  The session API fixes both ends:
 """
 from __future__ import annotations
 
+import os
+import tempfile
 from dataclasses import replace
 
 from ..compression.pwrel import PwRelParams
 from ..compression.store import BlockStore
+from ..errors import (BlockCorruptionError, MemoryPressureError,
+                      ResumableError, StoreIOError)
 from ..kernels.ops import default_interpret
 from .circuit import Circuit
 from .engine import BMQSimEngine, EngineConfig, SimStats
@@ -46,6 +50,11 @@ __all__ = ["Simulator", "circuit_fingerprint"]
 
 _CKPT_KIND = "bmqsim-checkpoint"
 _CKPT_VERSION = 2
+
+#: automatic replays-from-checkpoint after a detected corruption before
+#: giving up with a ResumableError (persistent corruption means the
+#: medium, not a transient flip)
+_MAX_REPLAYS = 2
 
 
 class Simulator:
@@ -156,7 +165,11 @@ class Simulator:
             seed: base trajectory seed (lane j draws with ``seed + j``).
             checkpoint_path: with ``checkpoint_every=k``, snapshot the
                 store + progress every k stages so an interrupted run can
-                :meth:`resume` from the last completed checkpoint.
+                :meth:`resume` from the last completed checkpoint.  A
+                blob corruption detected mid-run additionally triggers an
+                automatic in-process replay from that checkpoint
+                (``stats.n_replays``), and exhausted I/O retries surface
+                as a :class:`~repro.errors.ResumableError` naming it.
             checkpoint_every: checkpoint period in stages (0 = never).
 
         Returns:
@@ -202,20 +215,95 @@ class Simulator:
         self._generation += 1          # old handles read overwritten blocks
         self._batched = False
         on_stage_done = None
+        last_ckpt = {"stage": None}    # last checkpoint written THIS run
         if checkpoint_path and checkpoint_every > 0:
             def on_stage_done(idx: int) -> None:
                 if (idx + 1) % checkpoint_every == 0:
                     self._save_checkpoint(checkpoint_path,
                                           stages_done=idx + 1,
                                           run_params=params)
-        self._engine.run(collect_state=False, params=params,
-                         start_stage=start, on_stage_done=on_stage_done)
+                    last_ckpt["stage"] = idx + 1
+        self._run_resilient(params, start, on_stage_done,
+                            checkpoint_path, last_ckpt)
         self._last = SimResult(self._backend, self.n_qubits, self.local_bits,
                                stats=self._engine.stats, owner=self,
                                generation=self._generation)
         return self._last
 
-    def run_batch(self, params_list, *, seeds=None) -> BatchResult:
+    def _run_resilient(self, params, start, on_stage_done,
+                       checkpoint_path, last_ckpt) -> None:
+        """Drive ``engine.run`` with the resilience contract.
+
+        * :class:`~repro.errors.BlockCorruptionError` — a blob failed its
+          checksum mid-run.  If a checkpoint was written *this run*,
+          replay from it (restore the snapshot in place, restart from the
+          checkpointed stage; ``stats.n_replays``), up to ``_MAX_REPLAYS``
+          times; otherwise (or when corruption persists) propagate.
+        * :class:`~repro.errors.MemoryPressureError` — the monitor's
+          terminal rung fired at a stage boundary, where the store is
+          consistent: flush an emergency checkpoint
+          (``stats.n_emergency_checkpoints``) and re-raise carrying its
+          ``resume_path``.
+        * :class:`~repro.errors.StoreIOError` — retries exhausted
+          mid-stage, where the store holds a mix of old/new blocks, so NO
+          new snapshot is taken; re-raised as a
+          :class:`~repro.errors.ResumableError` naming the last periodic
+          checkpoint when one exists.
+        """
+        eng = self._engine
+        replays = 0
+        while True:
+            try:
+                eng.run(collect_state=False, params=params,
+                        start_stage=start, on_stage_done=on_stage_done)
+                return
+            except BlockCorruptionError as e:
+                eng._snap_store_stats()
+                stage = last_ckpt["stage"]
+                if (stage is None or checkpoint_path is None
+                        or replays >= _MAX_REPLAYS):
+                    if stage is not None and checkpoint_path is not None:
+                        raise ResumableError(
+                            f"corruption persisted across {replays} "
+                            f"replays: {e}",
+                            resume_path=checkpoint_path,
+                            stages_done=stage) from e
+                    raise
+                replays += 1
+                eng.stats.n_replays += 1
+                self._backend.store.load_snapshot(checkpoint_path)
+                start = stage
+            except MemoryPressureError as e:
+                eng._snap_store_stats()
+                path = checkpoint_path
+                if path is None:
+                    fd, path = tempfile.mkstemp(
+                        prefix="bmqsim-emergency-", suffix=".ckpt")
+                    os.close(fd)
+                try:
+                    self._save_checkpoint(path, stages_done=e.stages_done,
+                                          run_params=params)
+                except Exception:
+                    # the flush itself failed (e.g. the disk that just
+                    # overflowed): surface the original pressure abort
+                    raise e from None
+                eng.stats.n_emergency_checkpoints += 1
+                raise MemoryPressureError(
+                    e.args[0], resume_path=path,
+                    stages_done=e.stages_done) from e
+            except StoreIOError as e:
+                eng._snap_store_stats()
+                stage = last_ckpt["stage"]
+                if stage is not None and checkpoint_path is not None:
+                    raise ResumableError(
+                        f"store I/O failed after retries ({e})",
+                        resume_path=checkpoint_path,
+                        stages_done=stage) from e
+                raise
+
+    def run_batch(self, params_list, *, seeds=None,
+                  checkpoint_path: str | None = None,
+                  checkpoint_every: int = 0) -> BatchResult:
         """Execute K parameter bindings (and/or noise trajectories) as
         ONE lane-batched run.
 
@@ -240,7 +328,22 @@ class Simulator:
             exceed it, the engine warns and executes chunked
             sub-batches (``stats.n_batch_chunks``); results are
             identical.
+
+        Mid-run checkpointing is NOT supported for batched runs — the
+        store holds K lane states under one manifest, and a snapshot
+        taken mid-batch could not be resumed into any single-lane
+        session.  Passing ``checkpoint_path``/``checkpoint_every``
+        raises ``ValueError`` up front; checkpoint per-binding ``run()``
+        calls instead, or persist finished lanes from the
+        :class:`BatchResult`.
         """
+        if checkpoint_path is not None or checkpoint_every:
+            raise ValueError(
+                "run_batch does not support mid-run checkpointing: the "
+                "store holds K lane states under one manifest and a "
+                "mid-batch snapshot cannot be resumed; checkpoint "
+                "per-binding run() calls instead, or persist lanes via "
+                "BatchResult readout")
         if self._closed:
             raise RuntimeError("Simulator is closed")
         if self._engine is None:

@@ -4,7 +4,9 @@ compressed-store readout — the 2^n state is never materialized.
 
     PYTHONPATH=src python -m repro.launch.qsim --circuit qft --qubits 20 \
         [--block-bits 14] [--memory-budget 64] [--explain] [--ram-mb 64] \
-        [--shots 1024] [--expect zsum] [--save ck.bmq | --resume ck.bmq]
+        [--shots 1024] [--expect zsum] [--save ck.bmq | --resume ck.bmq] \
+        [--checkpoint-every 2] [--inject store.spill_read:ioerror:hit=3] \
+        [--disk-budget 256] [--no-guardrails]
 
 ``--block-bits`` defaults to **auto**: the planner picks
 ``(local_bits, inner_size, pipeline_depth)`` under ``--memory-budget``
@@ -13,11 +15,15 @@ compressed-store readout — the 2^n state is never materialized.
 working set and boundary traffic — and exits without executing a stage.
 """
 import argparse
+import contextlib
 
 import jax
 
 from ..core import (EngineConfig, Simulator, build_circuit,
                     with_depolarizing, zsum_cost_fn)
+from ..core.faults import INJECTION_POINTS, inject_faults
+from ..core.planner import estimate_bytes_per_amp
+from ..errors import ResumableError
 
 
 def main(argv=None):
@@ -78,9 +84,36 @@ def main(argv=None):
                          "<sum_i Z_i>")
     ap.add_argument("--save", default=None, metavar="PATH",
                     help="checkpoint the compressed final state to PATH")
+    ap.add_argument("--checkpoint-every", type=int, default=0, metavar="K",
+                    help="with --save: also snapshot the store to PATH "
+                         "every K stages DURING the run, so a crash is "
+                         "resumable from the last completed checkpoint "
+                         "(and a detected blob corruption auto-replays "
+                         "in-process)")
     ap.add_argument("--resume", default=None, metavar="PATH",
-                    help="skip simulation; read a saved checkpoint out "
-                         "(readout flags still apply)")
+                    help="read a saved checkpoint out (readout flags "
+                         "still apply); a PARTIAL mid-run checkpoint is "
+                         "finished first (pass the same --circuit/"
+                         "--qubits it was launched with)")
+    ap.add_argument("--inject", action="append", default=None,
+                    metavar="SPEC",
+                    help="deterministic fault injection for resilience "
+                         "drills: 'point:kind[:hit=N[,M]][:p=F]"
+                         "[:times=K]' with kind in ioerror|corrupt|crash"
+                         " and point one of "
+                         + "|".join(sorted(INJECTION_POINTS))
+                         + "; repeatable")
+    ap.add_argument("--inject-seed", type=int, default=0,
+                    help="seed for probabilistic injection draws and "
+                         "corruption positions")
+    ap.add_argument("--disk-budget", type=float, default=None,
+                    metavar="MIB",
+                    help="byte budget for the spill tier; overflowing it "
+                         "aborts at a stage boundary with an emergency "
+                         "checkpoint (the pressure ladder's final rung)")
+    ap.add_argument("--no-guardrails", action="store_true",
+                    help="disable block checksums and the memory-"
+                         "pressure monitor (benchmark baseline)")
     args = ap.parse_args(argv)
 
     lanes = args.trajectories or args.batch
@@ -93,6 +126,16 @@ def main(argv=None):
     if lanes and (args.save or args.resume):
         ap.error("checkpointing a batched run is not supported; drop "
                  "--save/--resume or the batch flags")
+    if args.checkpoint_every and not (args.save or args.resume):
+        ap.error("--checkpoint-every needs --save PATH (the checkpoint "
+                 "file to roll forward; with --resume it rolls that "
+                 "checkpoint forward)")
+
+    inject_ctx = (inject_faults(args.inject, seed=args.inject_seed)
+                  if args.inject else contextlib.nullcontext())
+    if args.inject:
+        print(f"[qsim] injecting faults (seed {args.inject_seed}): "
+              + "; ".join(args.inject))
 
     batch = None                       # BatchResult of a lane-batched run
     if args.resume:
@@ -100,8 +143,22 @@ def main(argv=None):
             ap.error("--explain needs a circuit to compile; it cannot be "
                      "combined with --resume (a checkpoint is a finished "
                      "state, not a plan)")
-        sim = Simulator.resume(args.resume)
-        result = sim.result()
+        try:
+            sim = Simulator.resume(args.resume)
+            result = sim.result()
+        except ValueError as e:
+            if "partial checkpoint" not in str(e):
+                raise
+            # mid-run checkpoint: rebuild the circuit and finish the run
+            qc = build_circuit(args.circuit, args.qubits)
+            sim = Simulator.resume(args.resume, circuit=qc)
+            print(f"[qsim] partial checkpoint "
+                  f"({sim._start_stage}/{sim._engine.partition.n_stages} "
+                  f"stages done); finishing the run")
+            with inject_ctx:
+                result = sim.run(checkpoint_path=args.resume
+                                 if args.checkpoint_every else None,
+                                 checkpoint_every=args.checkpoint_every)
         n = result.n_qubits
         print(f"[qsim] resumed {args.resume}: n={n}, "
               f"local_bits={result.local_bits}")
@@ -119,10 +176,29 @@ def main(argv=None):
             memory_budget_bytes=(int(args.memory_budget * 2 ** 20)
                                  if args.memory_budget else None),
             ram_budget_bytes=(int(args.ram_mb * 2 ** 20)
-                              if args.ram_mb else None))
+                              if args.ram_mb else None),
+            disk_budget_bytes=(int(args.disk_budget * 2 ** 20)
+                               if args.disk_budget else None),
+            integrity_checks=not args.no_guardrails,
+            pressure_monitor=not args.no_guardrails)
         sim = Simulator(qc, cfg)
         if args.explain:
             print(sim.compile().describe())
+            rcfg = sim.config
+            if rcfg.pressure_monitor:
+                bpa = estimate_bytes_per_amp(rcfg.b_r, rcfg.compression)
+                ladder = ("shrink_window -> wave_depth_1 -> "
+                          "proactive_spill"
+                          + (" -> abort+emergency-checkpoint"
+                             if args.disk_budget else ""))
+                print(f"[qsim] resilience: checksums="
+                      f"{'on' if rcfg.integrity_checks else 'off'} "
+                      f"io_retries={rcfg.io_retries}; pressure ladder "
+                      f"armed at >{rcfg.pressure_headroom:g}x predicted "
+                      f"{bpa:.2f} B/amp: {ladder}")
+            else:
+                print("[qsim] resilience: guardrails off "
+                      "(--no-guardrails)")
             sim.close()
             return 0
         rcfg = sim.config
@@ -132,11 +208,24 @@ def main(argv=None):
                   f"pipeline_depth={rcfg.pipeline_depth}"
                   + (f" under {args.memory_budget:g} MiB budget"
                      if args.memory_budget else " (no budget: heuristic)"))
-        if lanes:
-            batch = sim.run(trajectories=lanes, seed=args.noise_seed)
-            result = batch[0]          # readout flags stream lane 0
-        else:
-            result = sim.run()
+        try:
+            with inject_ctx:
+                if lanes:
+                    batch = sim.run(trajectories=lanes,
+                                    seed=args.noise_seed)
+                    result = batch[0]  # readout flags stream lane 0
+                else:
+                    result = sim.run(
+                        checkpoint_path=(args.save
+                                         if args.checkpoint_every
+                                         else None),
+                        checkpoint_every=args.checkpoint_every)
+        except ResumableError as e:
+            print(f"[qsim] run failed but is resumable: {e}")
+            print(f"[qsim] continue with: qsim --circuit {args.circuit} "
+                  f"--qubits {n} --resume {e.resume_path}")
+            sim.close()
+            return 1
         stats = sim.stats
         if lanes:
             kind = "trajectories" if args.trajectories else "lanes"
@@ -159,6 +248,12 @@ def main(argv=None):
               f"{stats.h2d_bytes/2**20:.2f} MiB h2d, "
               f"{stats.d2h_bytes/2**20:.2f} MiB d2h "
               f"over {stats.n_stages} stages")
+        if (stats.n_io_retries or stats.n_replays
+                or stats.n_corruptions_detected or stats.n_pressure_events):
+            print(f"[qsim] resilience: io_retries={stats.n_io_retries} "
+                  f"replays={stats.n_replays} corruptions_detected="
+                  f"{stats.n_corruptions_detected} pressure_rungs="
+                  f"{','.join(stats.pressure_rungs) or 'none'}")
 
     # readout streams the compressed store — one decoded block at a time
     if args.shots:
