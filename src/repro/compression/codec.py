@@ -25,6 +25,7 @@ import numpy as np
 from .lossless import (decode_bitmap, decode_codes, encode_bitmap,
                        encode_codes, prescan_decode_bitmap,
                        prescan_encode_bitmap)
+from ..faults import fault_point
 from .pwrel import PwRelParams, dequantize_plane, quantize_plane
 from .segments import BlockSegments, PlaneSegments
 
@@ -121,6 +122,7 @@ def compress_complex_block(amps: np.ndarray, params: PwRelParams,
         byte layout documented in ``segments.py``; never larger than the
         raw block plus a fixed 8-byte header.
     """
+    fault_point("codec.encode")
     amps = np.asarray(amps, dtype=np.complex64).reshape(-1)
     seg = encode_block_host(amps, params, prescan)
     return CompressedBlock(payload=seg.to_bytes(), n_amps=amps.size)
@@ -138,5 +140,6 @@ def decompress_complex_block(block: CompressedBlock | bytes,
         The reconstructed complex64 amplitudes (1-D), each non-zero element
         within relative error ``b_r`` per real plane.
     """
+    fault_point("codec.decode")
     blob = block.payload if isinstance(block, CompressedBlock) else block
     return decode_block_host(BlockSegments.from_bytes(blob), params)

@@ -43,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from ..faults import fault_point
 from ..kernels import pack as _pk
 from ..kernels import quantize as _qz
 from .lossless import decode_bitmap, decode_codes, encode_bitmap, encode_codes
@@ -146,6 +147,7 @@ def encode_group_device(amps: jax.Array, n_blocks: int, params: PwRelParams,
                         *, interpret: bool = True):
     """Complex-array convenience over :func:`encode_group_planes` —
     identical stored bytes (a complex64's components are already f32)."""
+    fault_point("codec.encode")
     planes = jnp.stack([jnp.real(amps), jnp.imag(amps)]).astype(jnp.float32)
     return encode_group_planes(planes, n_blocks, params, interpret=interpret)
 
@@ -306,6 +308,7 @@ def decode_blocks_device(pairs: list, n: int, params: PwRelParams, device,
 
     Returns (device complex64 blocks (len(pairs), n), bytes moved h2d).
     """
+    fault_point("codec.decode")
     planes, moved = decode_blocks_planes(pairs, n, params, device,
                                          interpret=interpret)
     return _planes_to_complex(planes), moved

@@ -123,16 +123,21 @@ class BlockStore:
         self.checksums = checksums
         self.io_retries = io_retries
         self.io_backoff_s = io_backoff_s
-        self._key2blob: dict[int, int] = {}
-        self._refs: dict[int, int] = {}        # blob id -> refcount
-        self._ram: dict[int, bytes] = {}       # blob id -> bytes
-        self._disk: dict[int, str] = {}        # blob id -> path
-        self._crc: dict[int, int] = {}         # blob id -> crc32 of bytes
-        self._ids = itertools.count()
+        # blob maps (_refs: id->refcount, _ram: id->blob, _disk:
+        # id->path, _crc: id->crc32 of serialized bytes).  The pipeline
+        # worker pools hit the store from several threads at once, so
+        # every field marked guarded-by below may only be touched inside
+        # 'with self._lock:' (enforced by the lock-discipline checker).
+        self._key2blob: dict[int, int] = {}    # guarded-by: _lock
+        self._refs: dict[int, int] = {}        # guarded-by: _lock
+        self._ram: dict[int, bytes] = {}       # guarded-by: _lock
+        self._disk: dict[int, str] = {}        # guarded-by: _lock
+        self._crc: dict[int, int] = {}         # guarded-by: _lock
+        self._ids = itertools.count()          # guarded-by: _lock
         self._spill_dir = spill_dir
         self._tmp: tempfile.TemporaryDirectory | None = None
-        self._lock = threading.RLock()   # pipeline pools hit the store
-        self.stats = StoreStats()        # from both sides concurrently
+        self._lock = threading.RLock()
+        self.stats = StoreStats()              # guarded-by: _lock
 
     # -- tier plumbing ---------------------------------------------------------
     def _spill_path(self, blob_id: int) -> str:
@@ -142,7 +147,7 @@ class BlockStore:
             self._spill_dir = self._tmp.name
         return os.path.join(self._spill_dir, f"blob_{blob_id}.bin")
 
-    def _fits_ram(self, nbytes: int) -> bool:
+    def _fits_ram(self, nbytes: int) -> bool:  # holds-lock: _lock
         if self.ram_budget is None:
             return True
         return self.stats.ram_bytes + nbytes <= self.ram_budget
@@ -203,7 +208,8 @@ class BlockStore:
                 where: str) -> None:
         if not self.checksums or bid is None:
             return
-        expected = self._crc.get(bid)
+        with self._lock:
+            expected = self._crc.get(bid)
         if expected is None:
             return
         actual = zlib.crc32(data)
@@ -249,7 +255,7 @@ class BlockStore:
             self.stats.observe()
             self._bind(key, bid)
 
-    def _release_blob(self, bid: int) -> None:
+    def _release_blob(self, bid: int) -> None:  # holds-lock: _lock
         self._refs[bid] -= 1
         if self._refs[bid] > 0:
             return
@@ -262,7 +268,7 @@ class BlockStore:
             self.stats.disk_bytes -= os.path.getsize(path)
             os.unlink(path)
 
-    def _bind(self, key: int, bid: int) -> None:
+    def _bind(self, key: int, bid: int) -> None:  # holds-lock: _lock
         old = self._key2blob.get(key)
         self._key2blob[key] = bid
         self._refs[bid] += 1
@@ -329,7 +335,8 @@ class BlockStore:
         return BlockSegments.from_bytes(blob)
 
     def __contains__(self, key: int) -> bool:
-        return key in self._key2blob
+        with self._lock:
+            return key in self._key2blob
 
     def nbytes_of(self, key: int) -> int:
         with self._lock:
@@ -346,10 +353,12 @@ class BlockStore:
 
     @property
     def total_bytes(self) -> int:
-        return self.stats.ram_bytes + self.stats.disk_bytes
+        with self._lock:
+            return self.stats.ram_bytes + self.stats.disk_bytes
 
     def keys(self):
-        return sorted(self._key2blob)
+        with self._lock:
+            return sorted(self._key2blob)
 
     # -- pressure relief -------------------------------------------------------
     def spill(self, target_ram_bytes: int) -> int:
@@ -464,34 +473,44 @@ class BlockStore:
         Structural validation happens BEFORE any blob is decoded: bad
         magic or a file length inconsistent with ``blob_sizes`` raises
         :class:`CheckpointError`; a per-blob digest mismatch raises
-        :class:`BlockCorruptionError` naming the blob index.
+        :class:`BlockCorruptionError` naming the blob index.  The raw
+        read is the ``checkpoint.read`` injection point; I/O failures
+        other than a missing file (the caller's "no checkpoint yet"
+        signal) surface as :class:`StoreIOError`.
         """
-        file_len = os.path.getsize(path)
-        with open(path, "rb") as f:
-            magic = f.read(len(_SNAP_MAGIC))
-            if magic != _SNAP_MAGIC:
-                raise CheckpointError(f"{path}: not a BMQSIM checkpoint "
-                                      f"(bad magic {magic!r})")
-            (hlen,) = _SNAP_HEAD.unpack(f.read(_SNAP_HEAD.size))
-            head_raw = f.read(hlen)
-            if len(head_raw) < hlen:
-                raise CheckpointError(
-                    f"{path}: truncated checkpoint (header cut short: "
-                    f"{len(head_raw)}/{hlen} bytes)")
-            try:
-                header = json.loads(head_raw.decode())
-            except (UnicodeDecodeError, json.JSONDecodeError) as e:
-                raise CheckpointError(
-                    f"{path}: corrupt checkpoint header ({e})") from e
-            sizes = header["blob_sizes"]
-            expected_len = (len(_SNAP_MAGIC) + _SNAP_HEAD.size + hlen
-                            + sum(sizes))
-            if file_len != expected_len:
-                raise CheckpointError(
-                    f"{path}: truncated/torn checkpoint — file is "
-                    f"{file_len} bytes but header promises {expected_len} "
-                    f"({len(sizes)} blobs totaling {sum(sizes)} bytes)")
-            blobs = [f.read(sz) for sz in sizes]
+        try:
+            fault_point("checkpoint.read")
+            file_len = os.path.getsize(path)
+            with open(path, "rb") as f:
+                magic = f.read(len(_SNAP_MAGIC))
+                if magic != _SNAP_MAGIC:
+                    raise CheckpointError(f"{path}: not a BMQSIM checkpoint "
+                                          f"(bad magic {magic!r})")
+                (hlen,) = _SNAP_HEAD.unpack(f.read(_SNAP_HEAD.size))
+                head_raw = f.read(hlen)
+                if len(head_raw) < hlen:
+                    raise CheckpointError(
+                        f"{path}: truncated checkpoint (header cut short: "
+                        f"{len(head_raw)}/{hlen} bytes)")
+                try:
+                    header = json.loads(head_raw.decode())
+                except (UnicodeDecodeError, json.JSONDecodeError) as e:
+                    raise CheckpointError(
+                        f"{path}: corrupt checkpoint header ({e})") from e
+                sizes = header["blob_sizes"]
+                expected_len = (len(_SNAP_MAGIC) + _SNAP_HEAD.size + hlen
+                                + sum(sizes))
+                if file_len != expected_len:
+                    raise CheckpointError(
+                        f"{path}: truncated/torn checkpoint — file is "
+                        f"{file_len} bytes but header promises "
+                        f"{expected_len} ({len(sizes)} blobs totaling "
+                        f"{sum(sizes)} bytes)")
+                blobs = [f.read(sz) for sz in sizes]
+        except FileNotFoundError:
+            raise
+        except OSError as e:
+            raise StoreIOError("checkpoint read", path=path) from e
         for i, (blob, sz) in enumerate(zip(blobs, sizes)):
             if len(blob) != sz:
                 raise CheckpointError(

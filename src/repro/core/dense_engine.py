@@ -47,7 +47,7 @@ def apply_matrix(state: jax.Array, mat: jax.Array, qubits: tuple[int, ...],
     perm = rest + [axes[j] for j in range(k - 1, -1, -1)]
     t = state.reshape((2,) * n).transpose(perm).reshape(-1, 2 ** k)
     t = t @ mat.astype(t.dtype).T
-    inv = np.argsort(np.asarray(perm))
+    inv = np.argsort(np.asarray(perm))  # jit-ok: perm is a static python list
     return t.reshape([2] * n).transpose(list(inv)).reshape(-1)
 
 

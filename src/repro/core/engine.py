@@ -299,7 +299,7 @@ def _apply_fused(amps: jax.Array, mats: tuple[jax.Array, ...],
             perm = rest + [axes[j] for j in range(k - 1, -1, -1)]
             t = amps.reshape((2,) * nv).transpose(perm).reshape(-1, 2 ** k)
             t = t * mat[None, :].astype(t.dtype)
-            inv = np.argsort(np.asarray(perm))
+            inv = np.argsort(np.asarray(perm))  # jit-ok: perm is a static python tuple
             amps = t.reshape([2] * nv).transpose(list(inv)).reshape(-1)
         else:
             amps = apply_matrix(amps, mat, vqubits, nv)

@@ -156,12 +156,14 @@ class CodecBackend:
         self.bsz = bsz
         self.compression = compression
         self.prescan = prescan
-        self.h2d_bytes = 0
-        self.d2h_bytes = 0
-        self.n_decompressions = 0
-        self.n_compressions = 0
         # phase hooks run in concurrent worker threads; counter updates
-        # are read-modify-write and need the lock
+        # are read-modify-write, so the fields below may only be touched
+        # inside 'with self._count_lock:' (lock-discipline checker) —
+        # mutate through add_counts / add_bytes
+        self.h2d_bytes = 0                     # guarded-by: _count_lock
+        self.d2h_bytes = 0                     # guarded-by: _count_lock
+        self.n_decompressions = 0              # guarded-by: _count_lock
+        self.n_compressions = 0                # guarded-by: _count_lock
         self._count_lock = threading.Lock()
 
     def add_counts(self, decompressions: int = 0,
@@ -363,6 +365,9 @@ class DeviceCodecBackend(CodecBackend):
         self.add_counts(decompressions=len(staged))
         return staged
 
+    # the wire staged here was fetched through fetch_group, whose
+    # per-block fault_point covers the path
+    # fault-covered: codec.decode
     def stage_to_device(self, staged, device):
         parts: list = [None] * len(staged)        # per block: (2, bsz) f32
         wire_idx = []
@@ -385,13 +390,16 @@ class DeviceCodecBackend(CodecBackend):
         return (jnp.concatenate(parts, axis=1) if len(parts) > 1
                 else parts[0])
 
+    # store_group fires the per-block fault_point on the same encoded
+    # wire before it persists
+    # fault-covered: codec.encode
     def dispatch_result(self, planes_dev, n_blocks):
         # the quantize/pack kernels launch here (async); only the wire
         # fetch in await_result blocks
         return encode_group_planes(planes_dev, n_blocks, self.params,
                                    interpret=self.interpret)
 
-    def await_result(self, ticket):
+    def await_result(self, ticket):  # fault-covered: codec.encode
         wire, moved = fetch_group_wire(ticket)    # blocks until done
         self.add_bytes(d2h=moved)
         return wire
@@ -408,6 +416,7 @@ class DeviceCodecBackend(CodecBackend):
     # -- row-batched overrides: every row's wire shares one codec
     # dispatch (the per-call decode/encode launch is the dominant cost on
     # a dispatch-bound config, so R rows must not pay it R times) --------
+    # fault-covered: codec.decode — batched sibling of stage_to_device
     def stage_to_device_batch(self, staged, device):
         parts = [[None] * len(row) for row in staged]
         wire, where = [], []
@@ -431,6 +440,7 @@ class DeviceCodecBackend(CodecBackend):
             jnp.concatenate(row, axis=1) if len(row) > 1 else row[0]
             for row in parts])
 
+    # fault-covered: codec.encode — batched sibling of dispatch_result
     def dispatch_result_batch(self, planes_dev, n_blocks):
         rows = planes_dev.shape[0]
         # row-major block order: (R, 2, N) -> (2, R*N), so one encode
@@ -441,7 +451,7 @@ class DeviceCodecBackend(CodecBackend):
                                       interpret=self.interpret)
         return (encoded, rows, n_blocks)
 
-    def await_result_batch(self, ticket):
+    def await_result_batch(self, ticket):  # fault-covered: codec.encode
         encoded, rows, n_blocks = ticket
         wire, moved = fetch_group_wire(encoded)   # blocks until done
         self.add_bytes(d2h=moved)
@@ -527,12 +537,15 @@ class StagePipeline:
         #: not the module constant — so the pressure ladder can shrink it
         #: to 1 between stages (rung 1) without rebuilding the pools.
         self.inflight_window = _INFLIGHT_WINDOW
-        self.t_load = 0.0
+        # t_load/t_store accumulate inside concurrent worker threads and
+        # may only be touched under _t_lock (lock-discipline checker);
+        # t_compute/t_fetch belong to the dispatch thread alone
+        self.t_load = 0.0                      # guarded-by: _t_lock
         self.t_compute = 0.0     # h2d staging + kernel dispatch (non-blocking)
         self.t_fetch = 0.0       # blocking result wait at the d2h boundary
-        self.t_store = 0.0
+        self.t_store = 0.0                     # guarded-by: _t_lock
         self.n_group_phases = 0
-        self._t_lock = threading.Lock()  # _load/_store run concurrently
+        self._t_lock = threading.Lock()
         self._dec_pool: ThreadPoolExecutor | None = None
         self._com_pool: ThreadPoolExecutor | None = None
         self._entered = False
@@ -756,7 +769,7 @@ class StagePipeline:
             for fut in pending_save:
                 try:
                     fut.result()
-                except Exception:
+                except Exception:  # lint: disable=typed-errors -- keep original error
                     pass
             raise
         for fut in pending_save:       # stage barrier (§4.1 semantics)

@@ -286,7 +286,7 @@ class ExecutionPlan:
         if d.get("kind") != "bmqsim-execution-plan":
             raise ValueError("not a serialized ExecutionPlan")
         n, b = d["n_qubits"], d["local_bits"]
-        stages = []
+        stages: list[StagePlan] = []
         for sd in d["stages"]:
             plan = tuple((tuple(vq), bool(diag)) for vq, diag in sd["plan"])
             layout = GroupLayout(n, b, tuple(sd["inner"]))

@@ -121,7 +121,8 @@ class Simulator:
         return self._engine.cfg if self._engine is not None else None
 
     # -- planning --------------------------------------------------------------
-    def compile(self, params: dict | None = None) -> ExecutionPlan:
+    def compile(self, params: dict | None = None, *,
+                verify: bool = True) -> ExecutionPlan:
         """Compile (but do not execute) the circuit: returns the
         :class:`~repro.core.plan.ExecutionPlan` this session will run —
         per-stage layouts/fused plans/schedules/stage-fn keys plus the
@@ -132,6 +133,16 @@ class Simulator:
         template yields the same plan, which is cached.  The subsequent
         :meth:`run` executes exactly this plan with zero additional
         schedule compilation.
+
+        With ``verify=True`` (the default) the plan is run through the
+        static verifier (:func:`repro.analysis.plan_check.check_plan`)
+        before being returned: layout chaining, gate-slice tiling,
+        permutation identity and byte-prediction consistency are proven
+        against the circuit, and a plan that fails raises
+        :class:`~repro.errors.PlanVerificationError`.  This catches
+        planner regressions and tampered/stale plan artifacts that the
+        fingerprint alone cannot (the fingerprint hashes only the stage
+        inner-sets and slice *lengths*).
         """
         if self._closed:
             raise RuntimeError("Simulator is closed")
@@ -139,7 +150,12 @@ class Simulator:
             raise RuntimeError(
                 "readout-only session (resumed without a circuit) has "
                 "no plan to compile; pass circuit= to Simulator.resume")
-        return self._engine.compile(params)
+        plan = self._engine.compile(params)
+        if verify:
+            # lazy: analysis.plan_check is pure but pulls the planner
+            from ..analysis.plan_check import check_plan
+            check_plan(plan, self._engine.circuit)
+        return plan
 
     # -- execution -------------------------------------------------------------
     def run(self, params: dict | None = None, *,
@@ -283,9 +299,11 @@ class Simulator:
                 try:
                     self._save_checkpoint(path, stages_done=e.stages_done,
                                           run_params=params)
-                except Exception:
+                except OSError:
                     # the flush itself failed (e.g. the disk that just
-                    # overflowed): surface the original pressure abort
+                    # overflowed — snapshot I/O surfaces as StoreIOError,
+                    # an OSError): surface the original pressure abort.
+                    # An InjectedCrash stays fatal, as a real kill would.
                     raise e from None
                 eng.stats.n_emergency_checkpoints += 1
                 raise MemoryPressureError(

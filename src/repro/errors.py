@@ -34,6 +34,7 @@ __all__ = [
     "CheckpointError",
     "ResumableError",
     "MemoryPressureError",
+    "PlanVerificationError",
 ]
 
 
@@ -132,3 +133,20 @@ class MemoryPressureError(ResumableError):
     tier's own budget overflowed).  When checkpointing is active the
     Simulator flushes an emergency checkpoint at the failing stage
     boundary and re-raises this carrying its path."""
+
+
+class PlanVerificationError(ValueError):
+    """An :class:`~repro.core.plan.ExecutionPlan` failed static
+    verification (:func:`repro.analysis.plan_check.check_plan`): its
+    stage layouts, gate slices, schedules or byte predictions are not
+    internally consistent, so executing it verbatim would corrupt state
+    or blow the budget.  ``findings`` carries every
+    ``PlanFinding`` (errors and warnings) from the failed pass.
+
+    Subclasses ``ValueError`` so callers treating "bad plan artifact"
+    generically (e.g. around ``ExecutionPlan.from_json``) keep working.
+    """
+
+    def __init__(self, msg: str, findings=()):
+        self.findings = tuple(findings)
+        super().__init__(msg)

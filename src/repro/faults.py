@@ -19,6 +19,7 @@ Registered points (see ARCHITECTURE.md "Resilience layer"):
 ``pipeline.fetch``    every pipeline fetch-worker step (one wave/group)
 ``pipeline.store``    every pipeline store-worker step (one wave/group)
 ``checkpoint.write``  every store snapshot (once per checkpoint)
+``checkpoint.read``   every snapshot parse (restore / resume / replay)
 ===================== =====================================================
 
 Fault *kinds*:
@@ -68,6 +69,7 @@ INJECTION_POINTS = frozenset({
     "pipeline.fetch",
     "pipeline.store",
     "checkpoint.write",
+    "checkpoint.read",
 })
 
 #: points whose payload is raw bytes — the only ones ``corrupt`` touches

@@ -13,6 +13,9 @@ compressed-store readout — the 2^n state is never materialized.
 (MiB) when given.  ``--explain`` prints the compiled
 :class:`~repro.core.plan.ExecutionPlan` — stage layouts, predicted
 working set and boundary traffic — and exits without executing a stage.
+``--verify`` instead runs the plan through the static verifier
+(:mod:`repro.analysis.plan_check`) and exits nonzero on any error
+finding — also without executing a stage.
 """
 import argparse
 import contextlib
@@ -45,6 +48,12 @@ def main(argv=None):
                     help="print the compiled ExecutionPlan (stage "
                          "layouts, predicted working set/traffic) and "
                          "exit without executing")
+    ap.add_argument("--verify", action="store_true",
+                    help="compile the plan and run the static verifier "
+                         "(layout chain, gate tiling, schedule identity, "
+                         "byte predictions) against the circuit, then "
+                         "exit without executing; nonzero on any error "
+                         "finding")
     ap.add_argument("--ram-mb", type=float, default=None)
     ap.add_argument("--pipeline-depth", type=int, default=None)
     ap.add_argument("--codec-backend", default="host",
@@ -139,10 +148,10 @@ def main(argv=None):
 
     batch = None                       # BatchResult of a lane-batched run
     if args.resume:
-        if args.explain:
-            ap.error("--explain needs a circuit to compile; it cannot be "
-                     "combined with --resume (a checkpoint is a finished "
-                     "state, not a plan)")
+        if args.explain or args.verify:
+            ap.error("--explain/--verify need a circuit to compile; they "
+                     "cannot be combined with --resume (a checkpoint is "
+                     "a finished state, not a plan)")
         try:
             sim = Simulator.resume(args.resume)
             result = sim.result()
@@ -182,6 +191,18 @@ def main(argv=None):
             integrity_checks=not args.no_guardrails,
             pressure_monitor=not args.no_guardrails)
         sim = Simulator(qc, cfg)
+        if args.verify:
+            from ..analysis.plan_check import verify_plan
+            plan = sim.compile(verify=False)   # verify_plan prints below
+            findings = verify_plan(plan, sim.circuit)
+            for f in findings:
+                print(f.render())
+            errors = sum(f.severity == "error" for f in findings)
+            print(f"[qsim] plan {plan.fingerprint[:12]}: "
+                  f"{plan.n_stages} stage(s) verified, {errors} error(s), "
+                  f"{len(findings) - errors} warning(s); no stage executed")
+            sim.close()
+            return 1 if errors else 0
         if args.explain:
             print(sim.compile().describe())
             rcfg = sim.config

@@ -1,0 +1,560 @@
+"""Static-analysis layer: the AST lint checkers and the plan verifier.
+
+Two halves, mirroring ``repro.analysis``:
+
+* each lint checker is pinned with a *positive* fixture (a seeded
+  violation it must flag) and a *negative* fixture (correct idiom it
+  must stay silent on), plus the pragma discipline around them;
+* the plan verifier is proven to reject tampered plans that the
+  state-layout fingerprint alone accepts — the exact gap it exists to
+  close — while passing every plan the planner actually emits.
+"""
+import textwrap
+from dataclasses import replace
+
+import pytest
+
+from repro.analysis import check_plan, verify_plan
+from repro.analysis.lint import (Violation, all_checkers, is_quarantined,
+                                 load_quarantine, run_checkers)
+from repro.core import EngineConfig, Simulator, build_circuit
+from repro.core.groups import GroupLayout
+from repro.core.plan import ExecutionPlan
+from repro.errors import PlanVerificationError
+
+# ---------------------------------------------------------------------------
+# lint framework helpers
+# ---------------------------------------------------------------------------
+
+
+def _lint(tmp_path, source, checker=None, name="snippet.py"):
+    """Write ``source`` to a temp file and run (one) checker over it."""
+    path = tmp_path / name
+    path.write_text(textwrap.dedent(source))
+    select = [checker] if checker else None
+    violations, n_files, _ = run_checkers(
+        [str(path)], select=select, use_quarantine=False)
+    assert n_files == 1
+    return violations
+
+
+def test_checker_registry_is_complete():
+    names = set(all_checkers())
+    assert {"fault-coverage", "lock-discipline",
+            "jit-purity", "typed-errors"} <= names
+
+
+def test_unknown_checker_is_an_error(tmp_path):
+    (tmp_path / "x.py").write_text("pass\n")
+    with pytest.raises(ValueError, match="unknown checker"):
+        run_checkers([str(tmp_path)], select=["no-such-checker"])
+
+
+def test_syntax_error_is_reported_not_raised(tmp_path):
+    (tmp_path / "broken.py").write_text("def f(:\n")
+    violations, _, _ = run_checkers([str(tmp_path)], use_quarantine=False)
+    assert [v.checker for v in violations] == ["parse"]
+
+
+# -- pragma discipline -------------------------------------------------------
+
+def test_pragma_without_reason_is_itself_flagged(tmp_path):
+    violations = _lint(tmp_path, """\
+        def spill(path):
+            with open(path, "rb") as fh:  # lint: disable=fault-coverage
+                return fh.read()
+        """)
+    checkers = {v.checker for v in violations}
+    # the reasonless pragma suppresses nothing AND is flagged itself
+    assert "pragma" in checkers
+    assert "fault-coverage" in checkers
+
+
+def test_pragma_with_reason_suppresses(tmp_path):
+    violations = _lint(tmp_path, """\
+        def spill(path):
+            with open(path, "rb") as fh:  # lint: disable=fault-coverage -- test fixture
+                return fh.read()
+        """)
+    assert violations == []
+
+
+# -- fault-coverage ----------------------------------------------------------
+
+def test_fault_coverage_flags_uninstrumented_io(tmp_path):
+    violations = _lint(tmp_path, """\
+        def spill(path, blob):
+            with open(path, "wb") as fh:
+                fh.write(blob)
+        """, checker="fault-coverage")
+    assert len(violations) == 1
+    assert violations[0].checker == "fault-coverage"
+    assert "open" in violations[0].message
+
+
+def test_fault_coverage_accepts_instrumented_io(tmp_path):
+    violations = _lint(tmp_path, """\
+        from repro.faults import fault_point
+
+        def spill(path, blob):
+            fault_point("store.spill_write", blob)
+            with open(path, "wb") as fh:
+                fh.write(blob)
+        """, checker="fault-coverage")
+    assert violations == []
+
+
+def test_fault_coverage_accepts_def_annotation(tmp_path):
+    violations = _lint(tmp_path, """\
+        # fault-covered: store.spill_write
+        def spill(path, blob):
+            with open(path, "wb") as fh:
+                fh.write(blob)
+        """, checker="fault-coverage")
+    assert violations == []
+
+
+def test_fault_coverage_rejects_unknown_point(tmp_path):
+    # a typo'd point name must not silently satisfy the checker
+    violations = _lint(tmp_path, """\
+        from repro.faults import fault_point
+
+        def spill(path, blob):
+            fault_point("store.bogus_point", blob)
+            with open(path, "wb") as fh:
+                fh.write(blob)
+        """, checker="fault-coverage")
+    assert any("store.bogus_point" in v.message for v in violations)
+
+
+def test_fault_coverage_rejects_unknown_annotation(tmp_path):
+    violations = _lint(tmp_path, """\
+        # fault-covered: not.a.point
+        def spill(path, blob):
+            with open(path, "wb") as fh:
+                fh.write(blob)
+        """, checker="fault-coverage")
+    assert any("not.a.point" in v.message for v in violations)
+
+
+def test_fault_coverage_flags_codec_primitives(tmp_path):
+    violations = _lint(tmp_path, """\
+        def roundtrip(planes, n, params):
+            return encode_group_planes(planes, n, params)
+        """, checker="fault-coverage")
+    assert len(violations) == 1
+    assert "encode_group_planes" in violations[0].message
+
+
+# -- lock-discipline ---------------------------------------------------------
+
+def test_lock_discipline_flags_unguarded_access(tmp_path):
+    violations = _lint(tmp_path, """\
+        import threading
+
+        class Counter:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.count = 0   # guarded-by: _lock
+
+            def bump(self):
+                self.count += 1
+        """, checker="lock-discipline")
+    assert len(violations) == 1
+    assert "count" in violations[0].message
+
+
+def test_lock_discipline_accepts_with_block(tmp_path):
+    violations = _lint(tmp_path, """\
+        import threading
+
+        class Counter:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.count = 0   # guarded-by: _lock
+
+            def bump(self):
+                with self._lock:
+                    self.count += 1
+        """, checker="lock-discipline")
+    assert violations == []
+
+
+def test_lock_discipline_accepts_holds_lock_annotation(tmp_path):
+    violations = _lint(tmp_path, """\
+        import threading
+
+        class Counter:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.count = 0   # guarded-by: _lock
+
+            def _bump_locked(self):  # holds-lock: _lock
+                self.count += 1
+        """, checker="lock-discipline")
+    assert violations == []
+
+
+def test_lock_discipline_tracks_nested_closures(tmp_path):
+    # a closure defined inside a with-block still holds the lock
+    violations = _lint(tmp_path, """\
+        import threading
+
+        class Counter:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.count = 0   # guarded-by: _lock
+
+            def bump_twice(self):
+                with self._lock:
+                    def inner():
+                        self.count += 1
+                    inner()
+                    inner()
+        """, checker="lock-discipline")
+    assert violations == []
+
+
+# -- jit-purity --------------------------------------------------------------
+
+def test_jit_purity_flags_host_sync_in_jitted_fn(tmp_path):
+    violations = _lint(tmp_path, """\
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            return np.asarray(x)
+        """, checker="jit-purity")
+    assert len(violations) == 1
+    assert "asarray" in violations[0].message
+
+
+def test_jit_purity_follows_call_graph(tmp_path):
+    # the sync hides one call deep behind a bare-name helper
+    violations = _lint(tmp_path, """\
+        import jax
+
+        def helper(x):
+            return float(x)
+
+        @jax.jit
+        def f(x):
+            return helper(x) + 1
+        """, checker="jit-purity")
+    assert len(violations) == 1
+    assert "float" in violations[0].message
+
+
+def test_jit_purity_allows_static_values(tmp_path):
+    # float()/int() over trace-time constants is not a device sync
+    violations = _lint(tmp_path, """\
+        import jax
+
+        LANES = 4
+
+        @jax.jit
+        def f(x):
+            return x * float(LANES) + int(len("ab"))
+        """, checker="jit-purity")
+    assert violations == []
+
+
+def test_jit_purity_honors_jit_ok_pragma(tmp_path):
+    violations = _lint(tmp_path, """\
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x, perm):
+            inv = np.argsort(np.asarray(perm))  # jit-ok: perm is static
+            return x[inv]
+        """, checker="jit-purity")
+    assert violations == []
+
+
+def test_jit_purity_ignores_unreachable_code(tmp_path):
+    violations = _lint(tmp_path, """\
+        import jax
+        import numpy as np
+
+        def host_only(x):
+            return np.asarray(x)
+
+        @jax.jit
+        def f(x):
+            return x + 1
+        """, checker="jit-purity")
+    assert violations == []
+
+
+# -- typed-errors ------------------------------------------------------------
+
+def test_typed_errors_flags_swallowed_broad_except(tmp_path):
+    violations = _lint(tmp_path, """\
+        def f():
+            try:
+                g()
+            except Exception:
+                pass
+        """, checker="typed-errors")
+    assert len(violations) == 1
+
+
+def test_typed_errors_flags_bare_except_and_broad_raise(tmp_path):
+    violations = _lint(tmp_path, """\
+        def f():
+            try:
+                g()
+            except:
+                raise
+            raise Exception("boom")
+        """, checker="typed-errors")
+    assert len(violations) == 2
+
+
+def test_typed_errors_accepts_broad_except_that_reraises(tmp_path):
+    violations = _lint(tmp_path, """\
+        def f():
+            try:
+                g()
+            except Exception:
+                cleanup()
+                raise
+        """, checker="typed-errors")
+    assert violations == []
+
+
+def test_typed_errors_accepts_narrow_except(tmp_path):
+    violations = _lint(tmp_path, """\
+        def f():
+            try:
+                g()
+            except (OSError, ValueError):
+                pass
+        """, checker="typed-errors")
+    assert violations == []
+
+
+# -- quarantine --------------------------------------------------------------
+
+def test_quarantine_skips_listed_paths(tmp_path):
+    (tmp_path / "live.py").write_text("raise Exception('x')\n")
+    dead = tmp_path / "deadwood"
+    dead.mkdir()
+    (dead / "old.py").write_text("raise Exception('x')\n")
+    q = tmp_path / "quarantine.txt"
+    q.write_text("deadwood  # dead scaffolding\n")
+    violations, n_files, skipped = run_checkers(
+        [str(tmp_path)], select=["typed-errors"],
+        quarantine_path=str(q))
+    assert n_files == 1 and len(skipped) == 1
+    assert len(violations) == 1 and "live.py" in violations[0].path
+
+
+def test_shipped_quarantine_matches_dead_scaffolding():
+    entries = load_quarantine()
+    frags = [frag for frag, _reason in entries]
+    assert "repro/models" in frags and "repro/train" in frags
+    # every entry carries its justification
+    assert all(reason for _frag, reason in entries)
+    assert is_quarantined("src/repro/models/transformer.py", entries)
+    assert not is_quarantined("src/repro/core/engine.py", entries)
+
+
+def test_violation_render_is_clickable():
+    v = Violation("typed-errors", "src/x.py", 7, "msg")
+    assert v.render() == "src/x.py:7: [typed-errors] msg"
+
+
+# ---------------------------------------------------------------------------
+# the live tree itself must be clean — this IS the CI gate, as a test
+# ---------------------------------------------------------------------------
+
+def test_live_tree_has_no_violations():
+    import os
+    root = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src", "repro")
+    violations, n_files, skipped = run_checkers([root])
+    assert violations == [], "\n".join(v.render() for v in violations)
+    assert n_files > 40          # the live tree, not an empty walk
+    assert skipped               # quarantine actually engaged
+
+
+# ---------------------------------------------------------------------------
+# plan verifier
+# ---------------------------------------------------------------------------
+
+QC = build_circuit("qft", 9)
+
+
+@pytest.fixture(scope="module")
+def compiled():
+    sim = Simulator(QC, EngineConfig(local_bits=4))
+    plan = sim.compile(verify=False)
+    yield sim, plan
+    sim.close()
+
+
+def test_planner_emitted_plan_is_clean(compiled):
+    sim, plan = compiled
+    findings = verify_plan(plan, sim.circuit)
+    assert [f for f in findings if f.severity == "error"] == []
+
+
+def test_json_roundtrip_stays_clean(compiled):
+    _, plan = compiled
+    findings = verify_plan(ExecutionPlan.from_json(plan.to_json()))
+    assert [f for f in findings if f.severity == "error"] == []
+
+
+def test_check_plan_returns_findings_when_clean(compiled):
+    sim, plan = compiled
+    assert check_plan(plan, sim.circuit) == verify_plan(plan, sim.circuit)
+
+
+def _tamper_stage(plan, i, **changes):
+    stages = list(plan.stages)
+    stages[i] = replace(stages[i], **changes)
+    return replace(plan, stages=tuple(stages))
+
+
+def test_shifted_gate_slice_is_fingerprint_invisible_but_caught(compiled):
+    """THE motivating case: same slice length, wrong gates."""
+    sim, plan = compiled
+    lo, hi = plan.stages[0].gate_slice
+    bad = _tamper_stage(plan, 0, gate_slice=(lo + 1, hi + 1))
+    # the fingerprint hashes only slice LENGTHS — it cannot see this
+    assert bad.fingerprint == plan.fingerprint
+    with pytest.raises(PlanVerificationError) as exc:
+        check_plan(bad, sim.circuit)
+    assert any(f.code == "gate-tiling" for f in exc.value.findings)
+
+
+def test_wrong_layout_chain_is_fingerprint_invisible_but_caught(compiled):
+    """Same inner set, GroupLayout rebuilt with the wrong local_bits."""
+    sim, plan = compiled
+    lay = plan.stages[0].layout
+    bad_layout = GroupLayout(lay.n_qubits, lay.local_bits + 1, lay.inner)
+    bad = _tamper_stage(plan, 0, layout=bad_layout)
+    assert bad.fingerprint == plan.fingerprint
+    with pytest.raises(PlanVerificationError) as exc:
+        check_plan(bad, sim.circuit)
+    assert any(f.code == "layout-chain" for f in exc.value.findings)
+
+
+def test_tampered_predictions_are_caught(compiled):
+    _, plan = compiled
+    bad = replace(plan, predicted=replace(
+        plan.predicted, boundary_bytes=plan.predicted.boundary_bytes + 1))
+    with pytest.raises(PlanVerificationError) as exc:
+        check_plan(bad)
+    assert any(f.code == "predictions" for f in exc.value.findings)
+
+
+def test_stale_stagefn_key_is_caught(compiled):
+    _, plan = compiled
+    sp = plan.stages[0]
+    bad = _tamper_stage(plan, 0, stagefn_key=sp.stagefn_key[:1]
+                        + (sp.stagefn_key[1] + 1,) + sp.stagefn_key[2:])
+    with pytest.raises(PlanVerificationError) as exc:
+        check_plan(bad)
+    assert any(f.code == "stagefn-key" for f in exc.value.findings)
+
+
+def test_wrong_transpose_counts_are_caught(compiled):
+    _, plan = compiled
+    i = next(i for i, sp in enumerate(plan.stages) if sp.plan)
+    bad = _tamper_stage(plan, i,
+                        n_transposes=plan.stages[i].n_transposes + 1)
+    with pytest.raises(PlanVerificationError) as exc:
+        check_plan(bad)
+    assert any(f.code == "schedule-replay" for f in exc.value.findings)
+
+
+def test_foreign_circuit_is_rejected(compiled):
+    _, plan = compiled
+    other = build_circuit("cat_state", 9)
+    with pytest.raises(PlanVerificationError) as exc:
+        check_plan(plan, other)
+    assert any(f.code == "gate-tiling" for f in exc.value.findings)
+
+
+def test_bogus_knobs_are_rejected(compiled):
+    _, plan = compiled
+    with pytest.raises(PlanVerificationError):
+        check_plan(replace(plan, pipeline_depth=0))
+    with pytest.raises(PlanVerificationError):
+        check_plan(replace(plan, local_bits=plan.n_qubits + 1))
+
+
+def test_over_budget_plan_warns_but_executes(compiled):
+    _, plan = compiled
+    tight = replace(plan, memory_budget_bytes=1)
+    findings = check_plan(tight)      # must NOT raise
+    assert any(f.severity == "warning" and f.code == "budget"
+               for f in findings)
+
+
+def test_plan_verification_error_is_a_value_error(compiled):
+    sim, plan = compiled
+    lo, hi = plan.stages[0].gate_slice
+    bad = _tamper_stage(plan, 0, gate_slice=(lo + 1, hi + 1))
+    with pytest.raises(ValueError):   # generic bad-artifact handling
+        check_plan(bad, sim.circuit)
+
+
+def test_simulator_compile_verifies_by_default():
+    sim = Simulator(QC, EngineConfig(local_bits=4))
+    try:
+        plan = sim.compile()          # verify=True is the default
+        assert plan.n_stages > 1
+    finally:
+        sim.close()
+
+
+def test_finding_render_carries_stage():
+    from repro.analysis.plan_check import PlanFinding
+    f = PlanFinding("error", "gate-tiling", "oops", stage=3)
+    assert f.render() == "[error] gate-tiling: stage 3: oops"
+    g = PlanFinding("warning", "budget", "tight")
+    assert g.render() == "[warning] budget: tight"
+
+
+# ---------------------------------------------------------------------------
+# CLI surfaces
+# ---------------------------------------------------------------------------
+
+def test_analysis_cli_lints_and_exits_nonzero(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+    (tmp_path / "bad.py").write_text("raise Exception('x')\n")
+    assert main([str(tmp_path), "--select", "typed-errors"]) == 1
+    assert "typed-errors" in capsys.readouterr().out
+    (tmp_path / "bad.py").write_text("raise ValueError('x')\n")
+    assert main([str(tmp_path), "--select", "typed-errors"]) == 0
+
+
+def test_analysis_cli_verifies_plan_artifact(tmp_path, capsys, compiled):
+    from repro.analysis.__main__ import main
+    _, plan = compiled
+    artifact = tmp_path / "plan.json"
+    artifact.write_text(plan.to_json())
+    assert main(["--plan", str(artifact)]) == 0
+    # tamper the artifact on disk: shift stage 0's slice (same length)
+    import json
+    doc = json.loads(plan.to_json())
+    lo, hi = doc["stages"][0]["gate_slice"]
+    doc["stages"][0]["gate_slice"] = [lo + 1, hi + 1]
+    artifact.write_text(json.dumps(doc))
+    capsys.readouterr()
+    assert main(["--plan", str(artifact)]) == 1
+    assert "gate-tiling" in capsys.readouterr().out
+
+
+def test_qsim_verify_flag(capsys):
+    from repro.launch.qsim import main
+    rc = main(["--circuit", "qft", "--qubits", "9", "--block-bits", "4",
+               "--verify"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "verified" in out and "no stage executed" in out
