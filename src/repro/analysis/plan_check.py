@@ -248,6 +248,21 @@ def verify_plan(plan: ExecutionPlan, circuit=None) -> list[PlanFinding]:
         if sp.n_devices != plan.n_devices:
             msg = f"stage n_devices={sp.n_devices} != plan n_devices={plan.n_devices}"
             err("placement", msg, i)
+        else:
+            # placement replay: every group must land on a real mesh slot
+            # (the engine trusts device_slot verbatim for its group ->
+            # device map and the exchange ledger).  Bounded: the slot
+            # assignment is periodic in n_devices, so the first 64k
+            # groups witness every residue class many times over.
+            for g in range(min(sp.layout.n_groups, 1 << 16)):
+                slot = sp.device_slot(g)
+                if not 0 <= slot < plan.n_devices:
+                    msg = (
+                        f"group {g} maps to device slot {slot}, outside "
+                        f"mesh [0, {plan.n_devices})"
+                    )
+                    err("placement", msg, i)
+                    break
 
         # gate tiling: slices must cover the circuit contiguously —
         # a shifted slice of equal length passes the fingerprint but
@@ -329,16 +344,37 @@ def verify_plan(plan: ExecutionPlan, circuit=None) -> list[PlanFinding]:
     if not _isclose(p.depth_speedup, speedup):
         msg = f"depth_speedup={p.depth_speedup} != overlap model {speedup}"
         err("predictions", msg)
+    dev_peak, dev_pipe = _predict_working_set(
+        n, b, max_m, plan.pipeline_depth, bpa, max(1, plan.batch), plan.n_devices
+    )
+    if p.per_device_peak_bytes != dev_peak + dev_pipe:
+        msg = (
+            f"per_device_peak_bytes={p.per_device_peak_bytes} != "
+            f"cost model {dev_peak + dev_pipe} for {plan.n_devices} device(s)"
+        )
+        err("predictions", msg)
 
     # over-budget is a warning: the planner documents planning the
-    # smallest candidate over budget and relying on the disk spill tier
+    # smallest candidate over budget and relying on the disk spill tier.
+    # The budget is per device — the busiest device's predicted share is
+    # what must fit (identical to the whole working set at n_devices=1)
     budget = plan.memory_budget_bytes
-    if budget is not None and p.working_set_bytes > budget:
+    if budget is not None and p.per_device_peak_bytes > budget:
         msg = (
-            f"predicted working set {p.working_set_bytes} B exceeds memory "
-            f"budget {budget} B — the run will lean on the disk spill tier"
+            f"predicted per-device peak {p.per_device_peak_bytes} B exceeds "
+            f"the per-device memory budget {budget} B — the run will lean "
+            f"on the disk spill tier"
         )
         warn("budget", msg)
+    # ragged lane shards are legal but cost one extra jit specialization
+    # per distinct shard width — surface the split explicitly
+    if plan.batch > 1 and plan.n_devices > 1 and plan.batch % plan.n_devices:
+        msg = (
+            f"batch={plan.batch} does not divide over {plan.n_devices} "
+            f"devices — lane shards are ragged "
+            f"({plan.batch % plan.n_devices} device(s) carry an extra lane)"
+        )
+        warn("placement", msg)
     return out
 
 

@@ -38,7 +38,9 @@ import numpy as np
 
 from ..compression.pwrel import PwRelParams
 from ..compression.store import BlockStore
+from ..distributed.lanes import make_lane_mesh, make_lane_shards
 from ..kernels.ops import default_interpret
+from .faults import fault_point
 from .circuit import Circuit, Gate
 from .dense_engine import apply_matrix
 from .fusion import FusedGate
@@ -106,6 +108,14 @@ class EngineConfig:
             fused unitary, complex64 round-trip per gate) — kept for the
             side-by-side benchmark.
         devices: round-robin group placement targets (default: device 0).
+        mesh_shape: build the run's device list from a 1-D simulation
+            mesh instead (``(N,)`` or a bare ``N`` — see
+            :func:`repro.distributed.lanes.make_lane_mesh`; ``qsim
+            --devices N`` sets this).  A batched run lane-shards over the
+            mesh (near-linear, zero collectives); a single run
+            block-shards its groups per the plan's ``device_slot`` with
+            compressed-wire exchange at stage boundaries.  An explicit
+            ``devices`` list wins over ``mesh_shape``.
         per_gate: SC19-Sim baseline — one stage per gate, i.e. a full
             decompress+recompress sweep per gate (§3).
         batch: the batch factor K the *planner* provisions for — a
@@ -153,6 +163,7 @@ class EngineConfig:
     use_kernel: bool = True
     gate_schedule: bool = True
     devices: list | None = None
+    mesh_shape: tuple | int | None = None
     per_gate: bool = False
     batch: int = 1
     integrity_checks: bool = True
@@ -215,6 +226,16 @@ class SimStats:
     h2d_bytes: int = 0
     d2h_bytes: int = 0
     per_stage_boundary_bytes: list = field(default_factory=list)
+    #: bytes of *encoded wire* (stored blob sizes) that changed owning
+    #: device between consecutive stages of a block-sharded run — the
+    #: device↔device analogue of the h2d/d2h ledger.  Only compressed
+    #: blobs ever cross (the store holds nothing else), so this divided
+    #: by ``n_exchanged_blocks * 2^local_bits * 8`` is the interconnect
+    #: saving over shipping raw amplitudes.  Lifetime total; the
+    #: per-stage list resets per run like per_stage_boundary_bytes.
+    exchange_bytes: int = 0
+    n_exchanged_blocks: int = 0
+    per_stage_exchange_bytes: list = field(default_factory=list)
     bytes_per_amp_measured: float = 0.0
     n_transposes_naive: int = 0
     n_transposes_scheduled: int = 0
@@ -453,7 +474,23 @@ class BMQSimEngine:
         self.circuit = circuit
         self._circuit_fp = circuit_fingerprint(circuit)
         self.n = circuit.n_qubits
-        self._devices = config.devices or [jax.devices()[0]]
+        #: the 1-D simulation mesh (None on a single device) — lanes or
+        #: block slots lay out along its one axis (distributed.lanes)
+        self.mesh = None
+        if config.devices:
+            self._devices = list(config.devices)
+        elif config.mesh_shape is not None:
+            self.mesh = make_lane_mesh(config.mesh_shape)
+            self._devices = list(self.mesh.devices.flat)
+        else:
+            self._devices = [jax.devices()[0]]
+        if (self.mesh is None and len(self._devices) > 1
+                and len({id(d) for d in self._devices})
+                == len(self._devices)):
+            # an explicit list with repeats (virtual slots on one device,
+            # the single-core CI idiom) is a legal placement but not a
+            # legal jax Mesh — run it mesh-less
+            self.mesh = make_lane_mesh(devices=self._devices)
         if plan is not None:
             if plan.circuit_fp != self._circuit_fp:
                 raise ValueError(
@@ -759,6 +796,30 @@ class BMQSimEngine:
             ram_budget=self.cfg.ram_budget_bytes,
             disk_budget=self.cfg.disk_budget_bytes)
 
+    def _exchange_ledger(self, owners: dict, gids: np.ndarray,
+                         slots: np.ndarray) -> int:
+        """Account the compressed-wire exchange one stage boundary of a
+        block-sharded run implies: every block whose owning device slot
+        changed since the previous stage moves as its *stored encoded
+        blob* (the store holds nothing rawer — both codec backends
+        persist the same compressed BlockSegments format), so the bytes
+        tallied here are exactly what would cross the interconnect.
+        ``owners`` maps block key -> previous slot and is updated in
+        place; returns the bytes moved at this boundary."""
+        moved = 0
+        for g, row in enumerate(gids):
+            slot = int(slots[g])
+            for key in row:
+                k = int(key)
+                prev = owners.get(k)
+                if prev is not None and prev != slot:
+                    fault_point("pipeline.exchange")
+                    moved += self.store.nbytes_of(k)
+                    self.stats.n_exchanged_blocks += 1
+                owners[k] = slot
+        self.stats.exchange_bytes += moved
+        return moved
+
     def _clear_lanes(self, new_lanes: int) -> None:
         """Drop the final states of lanes a previous (larger) batch left
         in the store — their keys would otherwise leak RAM forever."""
@@ -798,6 +859,7 @@ class BMQSimEngine:
         # per-run, not lifetime: a parameter sweep must not grow this
         # list without bound (scalar byte counters keep the totals)
         self.stats.per_stage_boundary_bytes = []
+        self.stats.per_stage_exchange_bytes = []
         if start_stage == 0:
             self._clear_lanes(1)
             self._init_state()
@@ -810,6 +872,11 @@ class BMQSimEngine:
         h2d0, d2h0 = back.h2d_bytes, back.d2h_bytes
         dec0, com0 = back.n_decompressions, back.n_compressions
         first_done = False
+        # block sharding (D > 1): groups follow the plan's device_slot
+        # round-robin; `owners` tracks each block's slot so stage
+        # boundaries account exactly the blocks that change hands
+        D = len(self._devices)
+        owners: dict[int, int] = {}
         with pipe:
             for idx, bs in enumerate(bound):
                 if idx < start_stage or not bs.plan:
@@ -831,8 +898,19 @@ class BMQSimEngine:
                 self.stats.n_transposes_scheduled += \
                     bs.sched.n_transposes * bs.layout.n_groups
                 sh2d, sd2h = back.h2d_bytes, back.d2h_bytes
-                pipe.run_stage(bs.layout.group_block_ids(), bs.fn, bs.mats,
-                               wave_fn=bs.wave_fn)
+                gids = bs.layout.group_block_ids()
+                group_devices = None
+                if D > 1:
+                    # the same round-robin StagePlan.device_slot records
+                    slots = np.arange(gids.shape[0], dtype=np.int64) % D
+                    self.stats.per_stage_exchange_bytes.append(
+                        self._exchange_ledger(owners, gids, slots))
+                    group_devices = [self._devices[int(s)] for s in slots]
+                else:
+                    self.stats.per_stage_exchange_bytes.append(0)
+                pipe.run_stage(gids, bs.fn, bs.mats,
+                               wave_fn=bs.wave_fn,
+                               group_devices=group_devices)
                 self.stats.per_stage_boundary_bytes.append(
                     (back.h2d_bytes - sh2d, back.d2h_bytes - sd2h))
                 if not first_done:
@@ -874,7 +952,7 @@ class BMQSimEngine:
         return max_feasible_lanes(
             self.n, self.b, max_m, self.cfg.pipeline_depth,
             estimate_bytes_per_amp(self.cfg.b_r, self.cfg.compression),
-            budget, lanes)
+            budget, lanes, n_devices=len(self._devices))
 
     def run_batch(self, bindings) -> None:
         """Execute the circuit for a whole batch of bindings at once.
@@ -910,6 +988,7 @@ class BMQSimEngine:
         self.stats.n_lanes = lanes
         self.stats.n_batch_chunks = -(-lanes // chunk)
         self.stats.per_stage_boundary_bytes = []
+        self.stats.per_stage_exchange_bytes = []
         # every lane re-initializes below, but chunk c's init only touches
         # chunk c's keys — drop ALL previous-run states up front so a
         # chunked batch never carries stale lanes through its first
@@ -935,6 +1014,16 @@ class BMQSimEngine:
             monitor.lanes = lane_base + lanes
         offsets = (lane_base + np.arange(lanes, dtype=np.int64)) \
             * self.n_blocks
+        # lane sharding (D > 1): contiguous near-even lane slices, one
+        # per mesh device.  Each shard owns a disjoint store-key range,
+        # so lanes never change hands — exchange bytes stay 0 and the
+        # only gather is the readout (the near-linear tier)
+        shards = None
+        if len(self._devices) > 1 and lanes > 1:
+            shards = [(s.device, s.lanes)
+                      for s in make_lane_shards(self._devices, lanes)]
+            if len(shards) == 1:
+                shards = None
         pipe = StagePipeline(self.backend, depth=self.cfg.pipeline_depth,
                              devices=self._devices)
         back = self.backend
@@ -959,9 +1048,11 @@ class BMQSimEngine:
                     bs.sched.n_transposes * bs.layout.n_groups
                 sh2d, sd2h = back.h2d_bytes, back.d2h_bytes
                 pipe.run_stage(bs.layout.group_block_ids(), bs.fn, bs.mats,
-                               lane_offsets=offsets, wave_fn=bs.wave_fn)
+                               lane_offsets=offsets, wave_fn=bs.wave_fn,
+                               lane_shards=shards)
                 self.stats.per_stage_boundary_bytes.append(
                     (back.h2d_bytes - sh2d, back.d2h_bytes - sd2h))
+                self.stats.per_stage_exchange_bytes.append(0)
                 if not first_done and lane_base == 0:
                     # calibrate on the first chunk only: later chunks'
                     # store totals include finished lanes' final states

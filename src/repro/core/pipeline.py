@@ -621,7 +621,8 @@ class StagePipeline:
 
     def run_stage(self, block_ids: np.ndarray, fn, mats,
                   lane_offsets: np.ndarray | None = None,
-                  wave_fn=None) -> None:
+                  wave_fn=None, lane_shards=None,
+                  group_devices=None) -> None:
         """Run one stage: ``block_ids`` is the (n_groups, 2^m) layout table,
         ``fn`` the jitted single-group update function, ``mats`` its
         operands.
@@ -636,42 +637,142 @@ class StagePipeline:
         key table stacks ``lane_offsets[:, None] + block_ids[g]`` for the
         wave's groups (groups-major), and ``wave_fn`` updates the
         (depth·L, 2, 2^(b+m)) row stack in one dispatch.
+
+        Multi-device placement (one of):
+
+        * ``lane_shards`` — ``[(device, lane_slice), ...]``: each wave
+          splits into one item per shard, carrying that shard's lane
+          rows (keys from ``lane_offsets[lane_slice]``) and its slice of
+          the lane-stacked operands, pre-placed on the shard's device.
+          Shards touch disjoint store-key ranges, so there is nothing to
+          exchange — the near-linear tier.
+        * ``group_devices`` — per-group device (the plan's
+          ``device_slot`` placement): the stage's groups are bucketed by
+          device, chunked into depth-wide waves, and interleaved so
+          consecutive dispatches land on different devices and overlap
+          under async dispatch.  The engine accounts the blocks whose
+          owner changed since the previous stage (compressed-wire
+          exchange).
+
+        Both default to the single-device schedule when absent.
         """
         assert self._entered, "use StagePipeline as a context manager"
         n_groups, n_blocks = block_ids.shape
         self.n_group_phases += n_groups
         if wave_fn is None:
+            # legacy per-gate path: no batched form to shard a wave with,
+            # but _run_sequential_single already places group g on
+            # devices[g % D] — the same round-robin the plan's
+            # device_slot records
             self._run_sequential_single(block_ids, fn, mats, lane_offsets)
             return
-
-        back = self.backend
-        W = min(self.depth, n_groups)
-        wave_keys = []
-        for lo in range(0, n_groups, W):
-            gids = block_ids[lo:lo + W]
-            if lane_offsets is None:
-                wave_keys.append(gids)              # rows = groups
-            else:                                   # rows = groups x lanes
-                wave_keys.append(np.concatenate(
-                    [lane_offsets[:, None] + row[None, :] for row in gids]))
+        items = self._wave_items(block_ids, mats, lane_offsets,
+                                 lane_shards, group_devices)
         if self._dec_pool is None:
-            # sequential wave loop: depth 1, or a coalescing-only host
-            # (no spare cores for the overlap workers) — same waves,
-            # same batch hooks, caller's thread
-            for keys in wave_keys:
-                staged = self._load(back.fetch_group_batch, keys)
-                t0 = time.perf_counter()
-                planes = back.stage_to_device_batch(staged,
-                                                    self._device_for(0))
-                out = wave_fn(planes, *mats)
-                ticket = back.dispatch_result_batch(out, n_blocks)
-                self.t_compute += time.perf_counter() - t0
-                t0 = time.perf_counter()
-                result = back.await_result_batch(ticket)
-                self.t_fetch += time.perf_counter() - t0
-                self._store(back.store_group_batch, keys, result)
+            self._run_waves(items, wave_fn, n_blocks)
             return
-        self._run_overlapped(wave_keys, wave_fn, mats, n_blocks)
+        self._run_overlapped(items, wave_fn, n_blocks)
+
+    # -- wave item construction ----------------------------------------------
+    def _wave_items(self, block_ids, mats, lane_offsets, lane_shards,
+                    group_devices):
+        """Flatten one stage into ``(key_rows, device, operands)`` wave
+        items — the unit both schedulers consume.  Operands are placed on
+        their item's device once per stage (committed arrays), so the
+        jitted wave fn runs where its planes live instead of dragging
+        uncommitted operands across the mesh on every dispatch."""
+        n_groups, _ = block_ids.shape
+        W = min(self.depth, n_groups)
+
+        def lane_keys(gids, offs):
+            return np.concatenate(
+                [offs[:, None] + row[None, :] for row in gids])
+
+        items = []
+        if lane_shards:
+            shard_ops = [
+                (dev, sl, tuple(jax.device_put(m[sl], dev) for m in mats))
+                for dev, sl in lane_shards]
+            for lo in range(0, n_groups, W):
+                gids = block_ids[lo:lo + W]
+                for dev, sl, smats in shard_ops:
+                    items.append((lane_keys(gids, lane_offsets[sl]),
+                                  dev, smats))
+            return items
+        if group_devices is not None:
+            # bucket groups by their slot device, chunk each bucket into
+            # depth-wide waves, and interleave one chunk per device so
+            # consecutive dispatches overlap across the mesh
+            buckets: dict[int, list[int]] = {}
+            order = []
+            for g, dev in enumerate(group_devices):
+                k = id(dev)
+                if k not in buckets:
+                    buckets[k] = []
+                    order.append((k, dev))
+                buckets[k].append(g)
+            dev_mats = {k: tuple(jax.device_put(m, dev) for m in mats)
+                        for k, dev in order}
+            chunks = {k: [buckets[k][i:i + W]
+                          for i in range(0, len(buckets[k]), W)]
+                      for k, _ in order}
+            while any(chunks[k] for k, _ in order):
+                for k, dev in order:
+                    if not chunks[k]:
+                        continue
+                    gids = block_ids[np.asarray(chunks[k].pop(0))]
+                    keys = (gids if lane_offsets is None
+                            else lane_keys(gids, lane_offsets))
+                    items.append((keys, dev, dev_mats[k]))
+            return items
+        for w, lo in enumerate(range(0, n_groups, W)):
+            gids = block_ids[lo:lo + W]
+            keys = (gids if lane_offsets is None
+                    else lane_keys(gids, lane_offsets))
+            items.append((keys, self._device_for(w), mats))
+        return items
+
+    @staticmethod
+    def _window_for(items, base: int) -> int:
+        """In-flight window of a wave-item schedule: at least one item
+        per distinct device, so a multi-device stage keeps every device
+        busy while older waves drain at the boundary."""
+        n_dev = len({id(dev) for _, dev, _ in items})
+        if n_dev <= 1:
+            return base
+        return max(base, min(n_dev, len(items)))
+
+    # -- sequential wave loop (depth 1 / coalescing-only hosts) ---------------
+    def _run_waves(self, items, wave_fn, n_blocks) -> None:
+        """Caller's-thread wave loop: no pools, no lookahead.  On one
+        device the window is 1 — the strictly sequential reference
+        schedule.  With several devices the window widens to the device
+        count: each device's compute is dispatched (async) before any
+        older wave's blocking boundary wait, so the mesh overlaps even
+        without worker threads."""
+        back = self.backend
+        window = self._window_for(items, 1)
+        in_flight: deque = deque()
+
+        def drain():
+            okeys, oticket = in_flight.popleft()
+            t0 = time.perf_counter()
+            result = back.await_result_batch(oticket)
+            self.t_fetch += time.perf_counter() - t0
+            self._store(back.store_group_batch, okeys, result)
+
+        for keys, dev, imats in items:
+            staged = self._load(back.fetch_group_batch, keys)
+            t0 = time.perf_counter()
+            planes = back.stage_to_device_batch(staged, dev)
+            out = wave_fn(planes, *imats)
+            ticket = back.dispatch_result_batch(out, n_blocks)
+            self.t_compute += time.perf_counter() - t0
+            in_flight.append((keys, ticket))
+            if len(in_flight) >= window:
+                drain()
+        while in_flight:
+            drain()
 
     # -- strictly sequential fallback (no batched stage fn) -------------------
     def _run_sequential_single(self, block_ids, fn, mats, lane_offsets):
@@ -705,9 +806,10 @@ class StagePipeline:
             self._store(store, group_keys[g], result)
 
     # -- the double-buffered wave loop ---------------------------------------
-    def _run_overlapped(self, wave_keys, wave_fn, mats, n_blocks) -> None:
+    def _run_overlapped(self, items, wave_fn, n_blocks) -> None:
         back = self.backend
-        n_waves = len(wave_keys)
+        n_waves = len(items)
+        window = self._window_for(items, self.inflight_window)
         ready: queue.SimpleQueue = queue.SimpleQueue()
         outstanding: dict[int, object] = {}
         submitted = 0
@@ -719,7 +821,7 @@ class StagePipeline:
                 submitted += 1
                 fut = self._dec_pool.submit(self._load,
                                             back.fetch_group_batch,
-                                            wave_keys[w])
+                                            items[w][0])
                 outstanding[w] = fut
                 fut.add_done_callback(lambda _f, w=w: ready.put(w))
 
@@ -734,15 +836,15 @@ class StagePipeline:
                 # the loop behind wave order
                 w = ready.get()
                 staged = outstanding.pop(w).result()
+                keys, dev, imats = items[w]
                 t0 = time.perf_counter()
-                planes = back.stage_to_device_batch(staged,
-                                                    self._device_for(w))
-                out = wave_fn(planes, *mats)
+                planes = back.stage_to_device_batch(staged, dev)
+                out = wave_fn(planes, *imats)
                 ticket = back.dispatch_result_batch(out, n_blocks)
                 self.t_compute += time.perf_counter() - t0
                 submit_next()          # keep the fetch lookahead full
                 in_flight.append((w, ticket))
-                if len(in_flight) >= self.inflight_window:
+                if len(in_flight) >= window:
                     # double buffer: wave w is computing asynchronously
                     # while this (older) wave's blocking wait drains
                     ow, oticket = in_flight.popleft()
@@ -751,7 +853,7 @@ class StagePipeline:
                     self.t_fetch += time.perf_counter() - t0
                     pending_save.append(self._com_pool.submit(
                         self._store, back.store_group_batch,
-                        wave_keys[ow], result))
+                        items[ow][0], result))
             while in_flight:           # drain the window
                 ow, oticket = in_flight.popleft()
                 t0 = time.perf_counter()
@@ -759,7 +861,7 @@ class StagePipeline:
                 self.t_fetch += time.perf_counter() - t0
                 pending_save.append(self._com_pool.submit(
                     self._store, back.store_group_batch,
-                    wave_keys[ow], result))
+                    items[ow][0], result))
         except BaseException:
             # fail fast without deadlocking the pools: drop queued
             # fetches, let running ones finish (shutdown waits), and

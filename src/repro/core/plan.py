@@ -143,6 +143,13 @@ class PlanPredictions:
     #: strictly sequential depth-1 schedule (the planner's overlap model,
     #: :func:`repro.core.planner.predict_depth_speedup`); 1.0 at depth 1
     depth_speedup: float = 1.0
+    #: predicted working set of the BUSIEST device of the mesh (store
+    #: peak + staging for its share of lanes/blocks).  The budget-facing
+    #: quantity of a sharded plan — ``memory_budget_bytes`` is per
+    #: device, and chunking engages only when this (not the mesh-wide
+    #: total) overflows it.  Equals ``working_set_bytes`` at n_devices=1;
+    #: 0 only in pre-v9 plan dumps (from_json backfills it).
+    per_device_peak_bytes: int = 0
 
     @property
     def working_set_bytes(self) -> int:
@@ -226,6 +233,11 @@ class ExecutionPlan:
             f"  predicted : pipeline depth {self.pipeline_depth} overlap "
             f"speedup {p.depth_speedup:.2f}x vs sequential",
         ]
+        if self.n_devices > 1:
+            lines.insert(6, (
+                f"  predicted : per-device peak "
+                f"{p.per_device_peak_bytes / mib:.2f} MiB across "
+                f"{self.n_devices} devices (budget is per device)"))
         for sp in self.stages[:max_stages]:
             lo, hi = sp.gate_slice
             inner = ",".join(map(str, sp.layout.inner)) or "-"
@@ -266,6 +278,8 @@ class ExecutionPlan:
                 "n_transposes": self.predicted.n_transposes,
                 "n_transposes_naive": self.predicted.n_transposes_naive,
                 "depth_speedup": self.predicted.depth_speedup,
+                "per_device_peak_bytes":
+                    self.predicted.per_device_peak_bytes,
             },
             "stages": [{
                 "index": sp.index,
@@ -302,6 +316,9 @@ class ExecutionPlan:
                 est_d2h_bytes=sd["est_d2h_bytes"]))
         pd = dict(d["predicted"])
         pd.setdefault("depth_speedup", 1.0)   # pre-v6 plan dumps
+        # pre-v9 dumps predate sharded placement: one device held it all
+        pd.setdefault("per_device_peak_bytes",
+                      pd["peak_ram_bytes"] + pd["pipeline_bytes"])
         return cls(
             circuit_fp=d["circuit_fp"], n_qubits=n, local_bits=b,
             inner_size=d["inner_size"], pipeline_depth=d["pipeline_depth"],

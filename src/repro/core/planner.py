@@ -193,8 +193,11 @@ def wire_bytes_per_block(bsz: int, codec_backend: str,
 
 
 def _predict_working_set(n: int, b: int, max_m: int, depth: int,
-                         bpa: float, lanes: int = 1) -> tuple[int, int]:
-    """(store peak, pipeline staging) in bytes for one candidate.
+                         bpa: float, lanes: int = 1,
+                         n_devices: int = 1) -> tuple[int, int]:
+    """(store peak, pipeline staging) in bytes for one candidate —
+    **per device** of an ``n_devices`` mesh (the whole machine at the
+    default ``n_devices=1``).
 
     Store peak: the whole compressed state plus ``depth + 1`` groups'
     worth of fresh blobs coexisting with the blocks they replace (the
@@ -210,26 +213,44 @@ def _predict_working_set(n: int, b: int, max_m: int, depth: int,
     ``lanes`` is the batch factor K: a batched run keeps K compressed
     state copies in the store and stages K-lane group stacks through the
     pipeline, so everything scales linearly with it.
+
+    Sharded placement (``n_devices > 1``) divides what a device holds:
+    a batched run shards *lanes* (``ceil(K / D)`` lanes per device — the
+    busiest device's share), a single-lane run shards *blocks*
+    (``ceil(state / D)``, the device_slot round-robin) while every wave
+    still stages one full group.  The busiest-device model is what the
+    per-device ``memory_budget_bytes`` compares against.
     """
     lanes = max(1, lanes)
+    d = max(1, n_devices)
     n_blocks = 1 << (n - b)
-    state = lanes * (int((1 << n) * bpa) + n_blocks * _BLOCK_OVERHEAD)
+    state_one = int((1 << n) * bpa) + n_blocks * _BLOCK_OVERHEAD
+    if d == 1:
+        state, staged_lanes = lanes * state_one, lanes
+    elif lanes > 1:
+        staged_lanes = -(-lanes // d)        # busiest device's lane share
+        state = staged_lanes * state_one
+    else:
+        state, staged_lanes = -(-state_one // d), 1   # block round-robin
     group = 1 << (b + max_m)
-    peak_ram = state + (depth + 1) * int(group * bpa) * lanes
+    peak_ram = state + (depth + 1) * int(group * bpa) * staged_lanes
     waves = 5 * depth if depth > 1 else 3
-    pipeline = waves * group * 8 * lanes
+    pipeline = waves * group * 8 * staged_lanes
     return peak_ram, pipeline
 
 
 def max_feasible_lanes(n: int, b: int, max_m: int, depth: int, bpa: float,
-                       budget: int, lanes: int) -> int:
+                       budget: int, lanes: int, n_devices: int = 1) -> int:
     """Largest sub-batch K' <= ``lanes`` whose predicted batched working
     set fits ``budget`` (>= 1: a single lane always runs, relying on the
     store's spill backstop when even that exceeds the budget).  The
     engine chunks an infeasible ``run_batch`` into sub-batches of this
-    size."""
+    size.  ``budget`` is per device: on an ``n_devices`` mesh the lanes
+    shard, so chunking engages only when the busiest device's lane share
+    overflows — the whole mesh must be exhausted first."""
     for cand in range(max(1, lanes), 1, -1):
-        peak, pipe = _predict_working_set(n, b, max_m, depth, bpa, cand)
+        peak, pipe = _predict_working_set(n, b, max_m, depth, bpa, cand,
+                                          n_devices)
         if peak + pipe <= budget:
             return cand
     return 1
@@ -275,10 +296,19 @@ def resolve_config(circuit, config, n_devices: int = 1,
     ``SimStats.pipeline_calibration()`` to re-plan from measurements):
     the tuner never selects a depth whose predicted speedup is < 1 — an
     explicitly requested depth is always honored verbatim.
+
+    ``memory_budget_bytes`` is **per device**: on an ``n_devices`` mesh a
+    candidate is feasible when the busiest device's predicted share fits,
+    and the store's derived ``ram_budget_bytes`` backstop scales to the
+    whole mesh (``budget * n_devices`` — the host store holds every
+    device's partition), so chunking/spilling engage only when the whole
+    mesh is exhausted, not when one device's budget would be.
     """
     budget = config.memory_budget_bytes
     ram_budget = (config.ram_budget_bytes
-                  if config.ram_budget_bytes is not None else budget)
+                  if config.ram_budget_bytes is not None
+                  else budget * max(1, n_devices) if budget is not None
+                  else None)
     if config.local_bits is not None:
         return replace(
             config,
@@ -324,7 +354,7 @@ def resolve_config(circuit, config, n_devices: int = 1,
             part = partition_circuit(circuit, b, m)
             for depth in depth_cands:
                 peak, pipe = _predict_working_set(n, b, eff_m, depth, bpa,
-                                                  lanes)
+                                                  lanes, n_devices)
                 cand = (part.n_stages, b, m, depth, peak + pipe, part)
                 if fallback is None or peak + pipe < fallback[4]:
                     fallback = cand
@@ -453,15 +483,21 @@ def assemble_plan(circuit_fp: str, cfg, partition, stage_plans,
         tot_t += n_t * layout.n_groups
         tot_tn += n_tn * layout.n_groups
         tot_boundary += 2 * stage_bytes
+    # peak_ram/pipeline stay mesh-wide (n_devices=1 form) — the quantity
+    # older dumps and the memory benchmarks report; the busiest device's
+    # share is the budget-facing per_device_peak_bytes
     peak_ram, pipeline = _predict_working_set(
         n, b, max_m, cfg.pipeline_depth, bpa, cfg.batch)
+    dev_peak, dev_pipe = _predict_working_set(
+        n, b, max_m, cfg.pipeline_depth, bpa, cfg.batch, n_devices)
     predicted = PlanPredictions(
         bytes_per_amp=bpa,
         state_bytes=int((1 << n) * bpa) + (1 << (n - b)) * _BLOCK_OVERHEAD,
         peak_ram_bytes=peak_ram, pipeline_bytes=pipeline,
         boundary_bytes=tot_boundary,
         n_transposes=tot_t, n_transposes_naive=tot_tn,
-        depth_speedup=predict_depth_speedup(cfg.pipeline_depth))
+        depth_speedup=predict_depth_speedup(cfg.pipeline_depth),
+        per_device_peak_bytes=dev_peak + dev_pipe)
     return ExecutionPlan(
         circuit_fp=circuit_fp, n_qubits=n, local_bits=b,
         inner_size=cfg.inner_size, pipeline_depth=cfg.pipeline_depth,

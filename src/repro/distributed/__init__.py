@@ -1,4 +1,13 @@
-from .sharding import (  # noqa: F401
-    TP_AXIS, dp_axes, param_pspecs, batch_pspecs, cache_pspecs,
-    named_shardings,
+"""Multi-device placement for the simulator: the lane/block mesh tier.
+
+The live API is :mod:`repro.distributed.lanes` (1-D simulation mesh,
+lane shards, group slots, readout gather).  The old LLM-training
+sharding rules survive as the quarantined submodule
+``repro.distributed.sharding`` — importable, but outside the lint/mypy
+surface (see ``analysis/quarantine.txt``).
+"""
+from .lanes import (  # noqa: F401
+    LANE_AXIS, LaneShard, activate_mesh, device_slots, gather_lanes,
+    lane_sharding, lane_spec, make_lane_mesh, make_lane_shards,
+    sim_devices,
 )

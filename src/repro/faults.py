@@ -18,6 +18,8 @@ Registered points (see ARCHITECTURE.md "Resilience layer"):
 ``codec.decode``      every host/device block-decode dispatch
 ``pipeline.fetch``    every pipeline fetch-worker step (one wave/group)
 ``pipeline.store``    every pipeline store-worker step (one wave/group)
+``pipeline.exchange`` every cross-device block hand-off (one block moving
+                      owners between stages of a block-sharded run)
 ``checkpoint.write``  every store snapshot (once per checkpoint)
 ``checkpoint.read``   every snapshot parse (restore / resume / replay)
 ===================== =====================================================
@@ -68,6 +70,7 @@ INJECTION_POINTS = frozenset({
     "codec.decode",
     "pipeline.fetch",
     "pipeline.store",
+    "pipeline.exchange",
     "checkpoint.write",
     "checkpoint.read",
 })

@@ -19,6 +19,7 @@ finding — also without executing a stage.
 """
 import argparse
 import contextlib
+import os
 
 import jax
 
@@ -27,6 +28,19 @@ from ..core import (EngineConfig, Simulator, build_circuit,
 from ..core.faults import INJECTION_POINTS, inject_faults
 from ..core.planner import estimate_bytes_per_amp
 from ..errors import ResumableError
+
+
+def _ensure_host_devices(n):
+    """Expose ``n`` virtual CPU devices before the jax backend spins up.
+
+    Must run before the first device query of the process; once the
+    backend is initialized the flag is inert (``sim_devices`` then clamps
+    the mesh to whatever is visible, with a warning).
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}").strip()
 
 
 def main(argv=None):
@@ -56,6 +70,12 @@ def main(argv=None):
                          "finding")
     ap.add_argument("--ram-mb", type=float, default=None)
     ap.add_argument("--pipeline-depth", type=int, default=None)
+    ap.add_argument("--devices", type=int, default=None, metavar="D",
+                    help="run on a D-device mesh: lanes shard across "
+                         "devices when batched, SV block groups shard "
+                         "across devices otherwise (only encoded wire "
+                         "crosses device boundaries); on CPU, forces D "
+                         "virtual host devices")
     ap.add_argument("--codec-backend", default="host",
                     choices=("host", "device"),
                     help="where the lossy codec runs; 'device' ships only "
@@ -125,6 +145,11 @@ def main(argv=None):
                          "pressure monitor (benchmark baseline)")
     args = ap.parse_args(argv)
 
+    if args.devices is not None and args.devices < 1:
+        ap.error("--devices needs a positive device count")
+    if args.devices and args.devices > 1:
+        _ensure_host_devices(args.devices)   # before any jax device query
+
     lanes = args.trajectories or args.batch
     if args.trajectories and args.batch:
         ap.error("--trajectories and --batch are exclusive (both set "
@@ -181,7 +206,9 @@ def main(argv=None):
             b_r=args.b_r, pipeline_depth=args.pipeline_depth,
             codec_backend=args.codec_backend,
             use_kernel=args.use_kernel, gate_schedule=args.gate_schedule,
-            devices=jax.devices(), batch=lanes or 1,
+            devices=None if args.devices else jax.devices(),
+            mesh_shape=(args.devices,) if args.devices else None,
+            batch=lanes or 1,
             memory_budget_bytes=(int(args.memory_budget * 2 ** 20)
                                  if args.memory_budget else None),
             ram_budget_bytes=(int(args.ram_mb * 2 ** 20)
@@ -269,6 +296,10 @@ def main(argv=None):
               f"{stats.h2d_bytes/2**20:.2f} MiB h2d, "
               f"{stats.d2h_bytes/2**20:.2f} MiB d2h "
               f"over {stats.n_stages} stages")
+        if args.devices and args.devices > 1:
+            print(f"[qsim] device exchange ({args.devices} devices): "
+                  f"{stats.exchange_bytes/2**20:.2f} MiB encoded wire "
+                  f"over {stats.n_exchanged_blocks} block hand-off(s)")
         if (stats.n_io_retries or stats.n_replays
                 or stats.n_corruptions_detected or stats.n_pressure_events):
             print(f"[qsim] resilience: io_retries={stats.n_io_retries} "

@@ -296,6 +296,38 @@ def test_plan_artifact_contents():
         assert f"{plan.n_stages} stages" in text
 
 
+def test_multidevice_plan_roundtrip_and_placement():
+    """A multi-device plan records per-device predictions and round-robin
+    group placement, survives JSON round-trip, and describe() surfaces
+    the mesh; a pre-v9 dump (no per_device_peak_bytes) is backfilled."""
+    import jax
+    qc = build_circuit("qft", 10)
+    cfg = EngineConfig(local_bits=4, devices=list(jax.devices()) * 4)
+    with Simulator(qc, cfg) as sim:
+        plan = sim.compile(verify=False)
+        assert plan.n_devices == 4
+        p = plan.predicted
+        assert 0 < p.per_device_peak_bytes <= (p.peak_ram_bytes
+                                               + p.pipeline_bytes)
+        for sp in plan.stages:
+            slots = {sp.device_slot(g) for g in range(sp.layout.n_groups)}
+            assert slots <= set(range(4))
+            assert sp.device_slot(5) == 5 % 4
+        text = plan.describe()
+        assert "devices=4" in text and "per-device peak" in text
+        blob = plan.to_json()
+        rt = ExecutionPlan.from_json(blob)
+        assert rt.predicted.per_device_peak_bytes == p.per_device_peak_bytes
+        assert rt.n_devices == 4
+        # pre-v9 dump: drop the field, from_json falls back to mesh peak
+        import json
+        old = json.loads(blob)
+        del old["predicted"]["per_device_peak_bytes"]
+        legacy = ExecutionPlan.from_json(json.dumps(old))
+        assert legacy.predicted.per_device_peak_bytes == (
+            p.peak_ram_bytes + p.pipeline_bytes)
+
+
 def test_plan_fingerprint_tracks_layout_not_execution_knobs():
     qc = build_circuit("qft", 8)
     def fp(**kw):
