@@ -1,0 +1,111 @@
+"""Service tier: cold-compile vs warm-cache latency + lane-merge throughput.
+
+Two measurements of `SimService` (docs/SERVING.md):
+
+* cold vs warm — submit+drain wall latency for the FIRST job of each of
+  8 distinct circuit structures (cold: Simulator built, plan compiled,
+  stage fns jitted) vs an immediate resubmit of the same structure
+  (warm: pooled session, everything reused).  Reported as p50/p95 over
+  the 8 structures; the cold/warm gap is the session pool's whole value.
+* continuous lane batching — 4 same-structure jobs submitted one-at-a-
+  time (4 width-1 rounds) vs co-submitted (ONE width-4 `run_batch` lane
+  stack).  `batch_merge_speedup` = sequential/merged wall time; merging
+  amortizes the per-round jitted dispatch + boundary crossing exactly
+  like `run_batch` beats the sequential loop, so it must stay >= 1.
+
+CPU timings here are noisy (2-3x swings); the merge comparison
+interleaves the two modes and reports median-over-reps so drift hits
+both sides alike, and the speedup is a within-run ratio so machine
+speed cancels.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+from repro.core import EngineConfig, SimService, build_circuit
+
+from .common import emit
+
+#: distinct structures for the cold/warm sweep (one cold compile each)
+STRUCTURES = ["qft", "ising", "ghz_state", "bv", "cc", "qaoa",
+              "cat_state", "qsvm"]
+N = 10
+B = 6
+BUDGET = 256 << 20
+
+#: the merge comparison runs dispatch-bound (small state, sub-second
+#: rounds): per (stage, group) the width-4 stack pays ONE jitted
+#: dispatch + boundary crossing where sequential rounds pay four, and
+#: short rounds let many interleaved reps beat down container noise
+MERGE_NAME, MERGE_N, MERGE_B = "qft", 10, 6
+MERGE_K = 4
+REPS = 9
+
+
+def _pctl(samples: list[float], q: float) -> float:
+    ordered = sorted(samples)
+    idx = min(len(ordered) - 1, round(q * (len(ordered) - 1)))
+    return ordered[int(idx)]
+
+
+def main() -> None:
+    cfg = EngineConfig(local_bits=B)
+    cold, warm = [], []
+    with SimService(BUDGET, config=cfg,
+                    max_sessions=len(STRUCTURES)) as svc:
+        for name in STRUCTURES:
+            qc = build_circuit(name, N)
+            t0 = time.perf_counter()
+            job = svc.submit(qc)
+            svc.drain()
+            cold.append(time.perf_counter() - t0)
+            assert job.cold and job.state == "done"
+            t0 = time.perf_counter()
+            job = svc.submit(qc)
+            svc.drain()
+            warm.append(time.perf_counter() - t0)
+            assert not job.cold and job.state == "done"
+        emit("serve", "cold_p50_s", _pctl(cold, 0.50))
+        emit("serve", "cold_p95_s", _pctl(cold, 0.95))
+        emit("serve", "warm_p50_s", _pctl(warm, 0.50))
+        emit("serve", "warm_p95_s", _pctl(warm, 0.95))
+        emit("serve", "cold_over_warm_p50",
+             _pctl(cold, 0.50) / _pctl(warm, 0.50))
+
+    qc = build_circuit(MERGE_NAME, MERGE_N)
+    cfg = EngineConfig(local_bits=MERGE_B)
+    with SimService(BUDGET, config=cfg) as svc:
+        # prewarm BOTH dispatch widths: the jitted stage fns specialize on
+        # lane count, and a serving system pays each width's compile once —
+        # the rows below are steady-state round times, not first-batch jit
+        svc.submit(qc)
+        svc.drain()
+        for i in range(MERGE_K):
+            svc.submit(qc, seed=i)
+        svc.drain()
+
+        seq_reps, mrg_reps = [], []
+        for _ in range(REPS):             # interleaved A/B, median-of-reps:
+            t0 = time.perf_counter()      # the ~5-10% merge win is real but
+            for i in range(MERGE_K):      # container timings swing 2-3x
+                svc.submit(qc, seed=i)    # one-at-a-time: width-1 rounds
+                svc.drain()
+            seq_reps.append(time.perf_counter() - t0)
+
+            t0 = time.perf_counter()
+            jobs = [svc.submit(qc, seed=i) for i in range(MERGE_K)]
+            svc.drain()                   # co-admitted: ONE width-K stack
+            mrg_reps.append(time.perf_counter() - t0)
+            assert all(j.merge_width == MERGE_K for j in jobs)
+
+        sequential = statistics.median(seq_reps)
+        merged = statistics.median(mrg_reps)
+        emit("serve", f"sequential_{MERGE_K}jobs_s", sequential)
+        emit("serve", f"merged_{MERGE_K}jobs_s", merged)
+        emit("serve", "batch_merge_speedup", sequential / merged)
+        emit("serve", "max_merge_width", svc.stats.max_merge_width)
+
+
+if __name__ == "__main__":
+    main()

@@ -15,8 +15,8 @@ import time
 
 from . import (bench_fidelity, bench_max_qubits, bench_memory,
                bench_multidev, bench_overhead, bench_partition,
-               bench_pipeline, bench_sc19, bench_session, bench_sim_time,
-               bench_tuning)
+               bench_pipeline, bench_sc19, bench_serve, bench_session,
+               bench_sim_time, bench_tuning)
 from .common import drain_rows
 
 BENCHES = {
@@ -31,6 +31,7 @@ BENCHES = {
     "partition": bench_partition.main,       # Fig. 14
     "tuning": bench_tuning.main,             # Fig. 15
     "session": bench_session.main,           # Simulator API reuse/readout
+    "serve": bench_serve.main,               # service tier cold/warm + merge
 }
 SLOW = {"multidev"}
 

@@ -18,6 +18,9 @@ Public API (the stable surface; everything else is internal layering):
     Planning     ExecutionPlan (Simulator.compile), StagePlan,
                  PlanPredictions — EngineConfig(local_bits=None,
                  memory_budget_bytes=...) auto-tunes the knobs
+    Service      SimService: multi-tenant plan-admission scheduling +
+                 continuous lane batching over a structure-keyed session
+                 pool; ServiceStats, Job, VirtualClock (docs/SERVING.md)
     One-shot     simulate_bmqsim (compat wrapper), simulate_dense
     Metrics      fidelity, max_pointwise_rel_error
     Compression  PwRelParams, compress_complex_block,
@@ -49,12 +52,12 @@ from .compression import (  # noqa: F401
 )
 from .core import (  # noqa: F401
     BatchResult, BMQSimEngine, Circuit, EngineConfig, ExecutionPlan,
-    FaultInjector, FaultSpec, Gate, InjectedCrash, Parameter,
-    PlanPredictions, PressureMonitor, SimResult, SimStats, Simulator,
-    StagePlan, build_circuit, fidelity, inject_faults,
-    max_pointwise_rel_error, maxcut_cost_fn, maxcut_edges, qaoa_template,
-    random_circuit, simulate_bmqsim, simulate_dense, with_depolarizing,
-    zsum_cost_fn,
+    FaultInjector, FaultSpec, Gate, InjectedCrash, Job, Parameter,
+    PlanPredictions, PressureMonitor, ServiceStats, SimResult, SimService,
+    SimStats, Simulator, StagePlan, VirtualClock, build_circuit, fidelity,
+    inject_faults, max_pointwise_rel_error, maxcut_cost_fn, maxcut_edges,
+    qaoa_template, random_circuit, simulate_bmqsim, simulate_dense,
+    with_depolarizing, zsum_cost_fn,
 )
 from .errors import (  # noqa: F401
     BlockCorruptionError, CheckpointError, MemoryPressureError,
@@ -67,6 +70,8 @@ __all__ = [
     "qaoa_template", "maxcut_edges", "maxcut_cost_fn",
     # sessions
     "Simulator", "SimResult", "BatchResult", "EngineConfig", "SimStats",
+    # service tier
+    "SimService", "ServiceStats", "Job", "VirtualClock",
     # noise trajectories
     "with_depolarizing", "zsum_cost_fn",
     # planning

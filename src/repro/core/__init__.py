@@ -26,4 +26,5 @@ from .pipeline import (  # noqa: F401
 from .measure import block_probabilities, expect_diagonal, sample_counts  # noqa: F401
 from .result import BatchResult, SimResult  # noqa: F401
 from .schedule import StageSchedule, compile_schedule, execute_schedule  # noqa: F401
+from .service import Job, ServiceStats, SimService, VirtualClock  # noqa: F401
 from .simulator import Simulator, circuit_fingerprint  # noqa: F401

@@ -167,6 +167,7 @@ class Gate:
 
 @dataclass
 class Circuit:
+    """An ordered gate list over ``n_qubits`` qubits (builder API below)."""
     n_qubits: int
     gates: list[Gate] = field(default_factory=list)
 

@@ -267,6 +267,7 @@ CIRCUIT_BUILDERS = {
 
 
 def build_circuit(name: str, n_qubits: int, **kwargs) -> Circuit:
+    """Instantiate a named benchmark circuit from :data:`CIRCUIT_BUILDERS`."""
     if name not in CIRCUIT_BUILDERS:
         raise KeyError(f"unknown circuit {name!r}; have {sorted(CIRCUIT_BUILDERS)}")
     return CIRCUIT_BUILDERS[name](n_qubits, **kwargs)

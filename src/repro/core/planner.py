@@ -50,7 +50,7 @@ __all__ = ["DEFAULT_INNER_SIZE", "DEFAULT_PIPELINE_DEPTH",
            "predict_depth_speedup",
            "estimate_bytes_per_amp", "wire_bytes_per_block",
            "resolve_config", "fuse_stage", "fuse_stage_lanes",
-           "max_feasible_lanes", "assemble_plan"]
+           "max_feasible_lanes", "peak_ram_for", "assemble_plan"]
 
 DEFAULT_INNER_SIZE = 2
 DEFAULT_PIPELINE_DEPTH = 2
@@ -254,6 +254,34 @@ def max_feasible_lanes(n: int, b: int, max_m: int, depth: int, bpa: float,
         if peak + pipe <= budget:
             return cand
     return 1
+
+
+def peak_ram_for(plan, lanes: int = 1, n_devices: int = 1) -> int:
+    """Admission-side predicted peak RAM (store peak + pipeline staging,
+    bytes) of executing ``plan`` with ``lanes`` concurrent lanes.
+
+    This is the quantity a multi-tenant scheduler sums against a global
+    memory budget (see :class:`repro.core.service.SimService`): it reads
+    everything from the frozen :class:`~repro.core.plan.ExecutionPlan`
+    artifact — no circuit, partition or engine needed — and uses exactly
+    the cost model ``resolve_config`` planned under, so admission
+    decisions are consistent with what the planner promised.  The model
+    is **linear in** ``lanes`` (state copies, staged group stacks and
+    pipeline waves all scale with the lane count), which is what makes
+    per-job reservations sum exactly: merging K admitted jobs into one
+    lane stack needs precisely the K reservations already held.
+
+    ``n_devices=1`` (the default) prices the whole-host working set —
+    the right quantity for a single-host service budget; pass the mesh
+    size to price the busiest device's share instead (the
+    ``per_device_peak_bytes`` form).
+    """
+    max_m = max((st.layout.m for st in plan.stages), default=0)
+    bpa = estimate_bytes_per_amp(plan.b_r, plan.compression)
+    peak, pipe = _predict_working_set(
+        plan.n_qubits, plan.local_bits, max_m, plan.pipeline_depth, bpa,
+        max(1, lanes), n_devices)
+    return peak + pipe
 
 
 def _default_auto(n: int) -> tuple[int, int, int]:

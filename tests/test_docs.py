@@ -1,0 +1,115 @@
+"""Docs stay honest: the generated API reference matches the live
+public surface, the doc tree's relative links resolve, and the
+generator/linkcheck CLIs behave as CI invokes them."""
+import os
+
+import pytest
+
+from repro.analysis import api_doc, linkcheck
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+API_MD = os.path.join(REPO, "docs", "API.md")
+
+
+# -- API drift (the CI docs gate, in-process) --------------------------------
+
+def test_api_md_matches_live_surface():
+    """docs/API.md is generated — regenerate and compare byte-for-byte.
+
+    Fails when repro.__all__ gains/loses/renames an export, a signature
+    changes, or a first docstring line changes, without the committed
+    doc being regenerated (python -m repro.analysis.api_doc --write)."""
+    with open(API_MD, encoding="utf-8") as fh:
+        committed = fh.read()
+    assert committed == api_doc.generate()
+
+
+def test_every_export_has_entry_and_summary():
+    import repro
+
+    text = api_doc.generate()
+    for name in repro.__all__:
+        assert f"### `{name}`" in text
+    assert "(no docstring)" not in text   # every export carries a summary
+
+
+def test_sections_cover_all_in_declared_order():
+    import repro
+
+    flat = [n for _, names in api_doc._sections() for n in names]
+    assert flat == list(repro.__all__)
+
+
+def test_api_doc_check_mode_detects_drift(tmp_path, capsys):
+    good = tmp_path / "API.md"
+    good.write_text(api_doc.generate(), encoding="utf-8")
+    assert api_doc.main(["--check", str(good)]) == 0
+
+    stale = tmp_path / "stale.md"
+    stale.write_text("# Public API reference\n\nold\n", encoding="utf-8")
+    assert api_doc.main(["--check", str(stale)]) == 1
+    assert "--write docs/API.md" in capsys.readouterr().out
+
+    missing = tmp_path / "absent.md"
+    assert api_doc.main(["--check", str(missing)]) == 1
+
+
+def test_signature_rendering_is_stable():
+    """The two rendering pitfalls pinned: keyword-only markers appear
+    exactly once, and no default leaks a memory address."""
+    text = api_doc.generate()
+    for block in text.split("```python")[1:]:
+        sig = block.split("```")[0]
+        assert sig.count("\n    *,\n") <= 1
+        assert "0x" not in sig
+
+
+# -- link check --------------------------------------------------------------
+
+def test_repo_docs_have_no_broken_links():
+    assert linkcheck.check_files(
+        [os.path.join(REPO, "README.md"), os.path.join(REPO, "docs")]) == []
+
+
+def test_linkcheck_flags_missing_relative_target(tmp_path):
+    md = tmp_path / "doc.md"
+    md.write_text(
+        "see [other](other.md) and [web](https://example.com) and\n"
+        "[anchor](#here) and [frag](other.md#sec)\n"
+        "```\n[not a link](nope.md) in a fence\n```\n",
+        encoding="utf-8")
+    problems = linkcheck.check_files([str(md)])
+    assert len(problems) == 2              # other.md twice, fence skipped
+    (tmp_path / "other.md").write_text("x", encoding="utf-8")
+    assert linkcheck.check_files([str(md)]) == []
+
+
+def test_linkcheck_cli_exit_codes(tmp_path):
+    ok = tmp_path / "ok.md"
+    ok.write_text("[self](ok.md)\n", encoding="utf-8")
+    assert linkcheck.main([str(ok)]) == 0
+    bad = tmp_path / "bad.md"
+    bad.write_text("[gone](gone.md)\n", encoding="utf-8")
+    assert linkcheck.main([str(tmp_path)]) == 1
+
+
+# -- README claims that must track the code ----------------------------------
+
+def test_readme_quotes_real_stats_line_shape():
+    """The README serving quickstart embeds a stats line; its field set
+    must match ServiceStats.summary() so the transcript can't rot."""
+    from repro.core.service import ServiceStats
+
+    with open(os.path.join(REPO, "README.md"), encoding="utf-8") as fh:
+        readme = fh.read()
+    lines = [ln for ln in readme.splitlines() if "[serve] stats:" in ln]
+    assert lines, "README lost the serve quickstart stats line"
+    quoted = lines[0].split("[serve] stats: ", 1)[1]
+    live_fields = [kv.split("=")[0] for kv in ServiceStats().summary().split()]
+    assert [kv.split("=")[0] for kv in quoted.split()] == live_fields
+
+
+@pytest.mark.parametrize("doc", ["SERVING.md", "API.md", "ARCHITECTURE.md"])
+def test_readme_links_the_doc(doc):
+    with open(os.path.join(REPO, "README.md"), encoding="utf-8") as fh:
+        assert f"docs/{doc}" in fh.read()

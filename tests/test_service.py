@@ -1,0 +1,229 @@
+"""Service tier: plan-admission scheduling + continuous lane batching.
+
+Pins the SimService contracts documented in docs/SERVING.md: the
+admission decision table (reject only when a job can *never* fit), the
+budget invariant (the reservation sum never exceeds the global budget,
+merged execution included), FIFO within a structure class, bitwise
+merge-vs-solo lane equality, cold/warm session-pool accounting, and
+exact virtual-clock latencies.
+"""
+import re
+
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, Simulator, SimService, VirtualClock,
+                        build_circuit, qaoa_template)
+from repro.core.planner import peak_ram_for
+from repro.errors import StoreIOError
+
+CFG = EngineConfig(local_bits=4)
+
+
+def peak1(circuit, cfg=CFG) -> int:
+    """Admission price of `circuit` at lanes=1 (what submit() charges)."""
+    with Simulator(circuit, cfg) as sim:
+        return peak_ram_for(sim.compile(), 1)
+
+
+# -- the admission decision table --------------------------------------------
+
+def test_admission_decision_table():
+    """budget = 2x peak: of four identical jobs, two admit, two queue;
+    the queue drains in arrival order as rounds free budget."""
+    qc = build_circuit("qft", 8)
+    p1 = peak1(qc)
+    with SimService(2 * p1, config=CFG) as svc:
+        jobs = [svc.submit(qc) for _ in range(4)]
+        assert [j.state for j in jobs] == ["admitted", "admitted",
+                                          "queued", "queued"]
+        assert svc.reserved_bytes == 2 * p1
+        done = svc.drain()
+        assert [j.job_id for j in done] == [0, 1, 2, 3]
+        assert all(j.state == "done" for j in jobs)
+        assert svc.reserved_bytes == 0
+        s = svc.stats
+        assert (s.n_submitted, s.n_admitted, s.n_queued, s.n_rejected) \
+            == (4, 2, 2, 0)
+        assert (s.n_cold_compiles, s.n_warm_hits) == (1, 3)
+        assert s.peak_reserved_bytes == 2 * p1 <= svc.memory_budget_bytes
+
+
+def test_rejection_only_when_never_fits():
+    """peak_ram(1) > budget is terminal rejection; peak_ram(1) == budget
+    admits — the boundary belongs to the job."""
+    qc = build_circuit("qft", 8)
+    p1 = peak1(qc)
+    with SimService(p1 - 1, config=CFG) as svc:
+        job = svc.submit(qc)
+        assert job.state == "rejected" and job.done
+        assert svc.drain() == []
+        assert svc.stats.n_rejected == 1 and svc.stats.n_completed == 0
+    with SimService(p1, config=CFG) as svc:
+        job = svc.submit(qc)
+        assert job.state == "admitted"
+        svc.drain()
+        assert job.state == "done"
+
+
+def test_admission_sum_never_exceeds_budget():
+    """The core invariant under concurrent mixed-structure load: at every
+    observable point the reservation sum stays within the budget, yet
+    every job eventually completes."""
+    circuits = [build_circuit("qft", 8), build_circuit("ising", 8),
+                build_circuit("ghz_state", 8)]
+    prices = [peak1(qc) for qc in circuits]
+    budget = max(prices) + min(prices)       # forces queueing, rejects none
+    with SimService(budget, config=CFG) as svc:
+        jobs = []
+        for rnd in range(3):
+            for qc in circuits:
+                jobs.append(svc.submit(qc))
+                assert svc.reserved_bytes <= budget
+        while True:
+            done = svc.step()
+            assert svc.reserved_bytes <= budget
+            if not done:
+                break
+        assert all(j.state == "done" for j in jobs)
+        assert svc.stats.peak_reserved_bytes <= budget
+        assert svc.stats.n_queued > 0        # the budget actually bound
+
+
+def test_fifo_within_structure_class():
+    """budget = 1 job: strictly sequential width-1 rounds, completion in
+    arrival order, every job's merge_width is 1."""
+    qc = build_circuit("qft", 8)
+    with SimService(peak1(qc), config=CFG) as svc:
+        jobs = [svc.submit(qc, seed=i) for i in range(3)]
+        done = svc.drain()
+        assert [j.job_id for j in done] == [0, 1, 2]
+        assert all(j.merge_width == 1 for j in jobs)
+        assert svc.stats.merge_widths == [1, 1, 1]
+        assert svc.stats.n_merged_jobs == 0
+
+
+# -- continuous lane batching ------------------------------------------------
+
+def test_merge_bitwise_equal_vs_solo():
+    """Three co-admitted same-structure jobs merge into one width-3
+    run_batch whose per-lane states are bitwise identical to each job
+    run solo (every dispatch goes through run_batch, width 1 included)."""
+    qc = qaoa_template(8)
+    points = [{"gamma0": g, "beta0": b}
+              for g, b in [(0.3, 0.15), (0.7, 0.40), (1.1, 0.65)]]
+    grab = {"readout": lambda view: np.asarray(view.statevector())}
+
+    with SimService(64 << 20, config=CFG) as svc:
+        merged = [svc.submit(qc, params=p, **grab) for p in points]
+        svc.drain()
+    assert all(j.merge_width == 3 for j in merged)
+    assert svc.stats.n_batches == 1 and svc.stats.max_merge_width == 3
+
+    for p, mj in zip(points, merged):
+        with SimService(64 << 20, config=CFG) as solo_svc:
+            sj = solo_svc.submit(qc, params=p, **grab)
+            solo_svc.drain()
+        assert sj.merge_width == 1
+        assert np.array_equal(mj.result["readout"], sj.result["readout"])
+
+
+def test_different_structures_never_merge():
+    qft, ising = build_circuit("qft", 8), build_circuit("ising", 8)
+    with SimService(64 << 20, config=CFG) as svc:
+        jobs = [svc.submit(qc) for qc in (qft, ising, qft, ising)]
+        svc.drain()
+        assert svc.stats.n_batches == 2
+        assert sorted(svc.stats.merge_widths) == [2, 2]
+        assert jobs[0].structure == jobs[2].structure
+        assert jobs[0].structure != jobs[1].structure
+
+
+# -- session pool ------------------------------------------------------------
+
+def test_session_pool_cold_warm_and_lru_eviction():
+    qft, ising = build_circuit("qft", 8), build_circuit("ising", 8)
+    with SimService(64 << 20, config=CFG, max_sessions=1) as svc:
+        svc.submit(qft)
+        svc.drain()
+        assert (svc.stats.n_cold_compiles, svc.n_sessions) == (1, 1)
+        svc.submit(ising)                    # evicts the idle qft session
+        svc.drain()
+        assert svc.stats.n_sessions_evicted == 1 and svc.n_sessions == 1
+        job = svc.submit(qft)                # structure re-enters cold
+        svc.drain()
+        assert job.cold and svc.stats.n_cold_compiles == 3
+
+
+def test_pending_sessions_are_not_evicted():
+    """A structure with admitted-but-unfinished jobs survives the pool
+    cap — its jobs were priced against that compiled plan."""
+    qft, ising = build_circuit("qft", 8), build_circuit("ising", 8)
+    with SimService(64 << 20, config=CFG, max_sessions=1) as svc:
+        j1 = svc.submit(qft)                 # pending on the qft session
+        svc.submit(ising)                    # pool over cap, qft busy
+        assert svc.n_sessions == 2
+        svc.drain()
+        assert j1.state == "done"
+
+
+# -- determinism under a virtual clock ---------------------------------------
+
+def test_virtual_clock_exact_waits_and_latencies():
+    qc = build_circuit("qft", 8)
+    p1 = peak1(qc)
+    clock = VirtualClock()
+    with SimService(p1, config=CFG, clock=clock) as svc:
+        first, second = svc.submit(qc), svc.submit(qc)
+        assert (first.state, second.state) == ("admitted", "queued")
+        clock.advance(2.0)
+        assert svc.step() == [first]
+        assert first.wait_s == 0.0 and first.latency_s == 2.0
+        assert second.wait_s == 2.0          # promoted when round 1 freed
+        clock.advance(1.5)
+        assert svc.step() == [second]
+        assert second.latency_s == 3.5
+    with pytest.raises(ValueError):
+        clock.advance(-1.0)
+
+
+# -- failure semantics -------------------------------------------------------
+
+def test_typed_engine_failure_fails_batch_and_keeps_serving():
+    qc = build_circuit("qft", 8)
+    with SimService(64 << 20, config=CFG) as svc:
+        job = svc.submit(qc)
+        sess = svc._sessions[job.structure]
+
+        def boom(*a, **k):
+            raise StoreIOError("read", key=7)
+
+        sess.sim.run_batch = boom
+        assert svc.step() == [job]
+        assert job.state == "failed" and "StoreIOError" in job.error
+        assert svc.reserved_bytes == 0 and svc.stats.n_failed == 1
+        ok = svc.submit(build_circuit("ising", 8))
+        svc.drain()
+        assert ok.state == "done"            # the service kept serving
+
+
+def test_submit_after_close_raises():
+    svc = SimService(64 << 20, config=CFG)
+    svc.close()
+    with pytest.raises(RuntimeError):
+        svc.submit(build_circuit("qft", 8))
+
+
+# -- stats surface -----------------------------------------------------------
+
+def test_stats_summary_is_the_documented_line():
+    qc = build_circuit("qft", 8)
+    with SimService(64 << 20, config=CFG) as svc:
+        svc.submit(qc)
+        svc.submit(qc)
+        svc.drain()
+        line = svc.stats.summary()
+    assert re.fullmatch(
+        r"submitted=2 admitted=2 queued=0 rejected=0 completed=2 failed=0 "
+        r"cold=1 warm=1 batches=1 merged=2 max_merge=2 "
+        r"peak_reserved_mib=\d+\.\d\d", line)
